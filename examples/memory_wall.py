@@ -1,0 +1,39 @@
+"""Reproduce the paper's memory-wall quantitative study (§2.1/§2.2 examples)
+and Figure 3/5 analogues at full Table-1 sizes — no execution, pure
+saved-residual accounting.
+
+    PYTHONPATH=src python examples/memory_wall.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.paper_tables import IMPLS, residual_bytes
+from repro.configs.paper_tables import PAPER_TABLE1
+
+
+def main():
+    # §2.1 example: DeepSeek-scale routed-token buffer
+    L, k, d = 2_000_000, 4, 6144
+    print(f"paper §2.1: routed-token buffer L={L:.0e} k={k} d={d} bf16 -> "
+          f"{L*d*k*2/1e9:.0f} GB (eliminated by index-based dispatch: "
+          f"{L*k*4*2/1e9:.2f} GB of int32 indices instead)")
+    h = 4 * 6144
+    print(f"paper §2.2: FFN intermediates 2·L·h bf16 -> {2*L*h*2/1e9:.0f} GB "
+          f"(halved by save-A,B + recompute-SiLU)\n")
+
+    print(f"{'conf':12s} {'act':7s}" + "".join(f"{i:>14s}" for i in IMPLS)
+          + f"{'ratio':>8s}")
+    for name, conf in PAPER_TABLE1.items():
+        for act in ("silu", "swiglu"):
+            vals = {i: residual_bytes(conf, i, act) for i in IMPLS}
+            ratio = vals["megablocks"] / vals["blaze"]
+            print(f"{name:12s} {act:7s}" +
+                  "".join(f"{vals[i]/1e6:12.0f}MB" for i in IMPLS) +
+                  f"{ratio:7.2f}x")
+
+
+if __name__ == "__main__":
+    main()

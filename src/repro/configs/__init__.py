@@ -1,0 +1,40 @@
+"""Config registry: ``get_config(arch_id)`` for the 10 assigned architectures
+plus the paper's Table-1 configs (``paper_conf1`` … ``paper_conf7``)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                TrainConfig)
+from repro.configs.paper_tables import PAPER_CONFS
+
+ARCH_IDS = [
+    "yi_6b", "qwen3_moe_30b_a3b", "xlstm_1_3b", "deepseek_coder_33b",
+    "gemma2_27b", "mixtral_8x7b", "hubert_xlarge",
+    "llava_next_mistral_7b", "hymba_1_5b", "qwen3_14b",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+_ALIASES.update({
+    "yi-6b": "yi_6b", "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "xlstm-1.3b": "xlstm_1_3b", "deepseek-coder-33b": "deepseek_coder_33b",
+    "gemma2-27b": "gemma2_27b", "mixtral-8x7b": "mixtral_8x7b",
+    "hubert-xlarge": "hubert_xlarge",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "hymba-1.5b": "hymba_1_5b", "qwen3-14b": "qwen3_14b",
+})
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    key = _ALIASES.get(arch_id, arch_id)
+    if key.startswith("paper_conf"):
+        return PAPER_CONFS[key]
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+__all__ = ["get_config", "ARCH_IDS", "ModelConfig", "TrainConfig",
+           "InputShape", "INPUT_SHAPES", "PAPER_CONFS"]

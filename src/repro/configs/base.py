@@ -1,0 +1,153 @@
+"""Config system: model/arch configs, input shapes, and run settings."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.  One instance per assigned architecture (see
+    ``src/repro/configs/<id>.py``); ``reduced()`` yields the CPU smoke-test
+    variant of the same family."""
+
+    name: str
+    arch_type: str                       # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0                    # 0 -> d_model // num_heads
+    d_ff: int = 512
+    vocab_size: int = 1024
+    ffn_act: str = "swiglu"              # swiglu | gelu | silu | relu
+
+    # --- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                    # per-expert hidden dim
+    moe_impl: str = "blaze"              # blaze | blaze_pallas | megablocks | dense
+    moe_parallel: str = "auto"           # auto | ep | tp (distributed mode)
+    save_yswi: bool = True               # paper-faithful Algorithm 1 residuals
+    aux_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-3
+
+    # --- attention variants --------------------------------------------------
+    sliding_window: int = 0              # 0 -> full attention
+    local_global_period: int = 0         # gemma2: 2 -> alternate local/global
+    attn_softcap: float = 0.0            # gemma2: 50.0
+    final_softcap: float = 0.0           # gemma2: 30.0
+    qk_norm: bool = False                # qwen3
+    post_norms: bool = False             # gemma2 sandwich norms
+    causal: bool = True                  # False for encoder-only (hubert)
+    rope_theta: float = 10_000.0
+
+    # --- SSM / hybrid --------------------------------------------------------
+    block_pattern: tuple[str, ...] = ("attn_ffn",)  # scanned per-group pattern
+    ssm_state: int = 0                   # mamba/hymba state size
+    ssm_heads: int = 0                   # parallel SSM heads (hymba)
+    mamba_dual: bool = False             # Mamba-2 chunked dual form (§Perf)
+    slstm_every: int = 0                 # xlstm: one sLSTM per this many layers
+
+    # --- modality frontends (stubs per the brief) ---------------------------
+    input_kind: str = "tokens"           # tokens | frames (audio) | mixed (vlm)
+    num_image_tokens: int = 0            # vlm: patch-embedding slots per sample
+
+    # --- numerics / system ---------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    # Layer-scan remat: "none" = recompute the layer in backward (production
+    # default; the paper's A/B/Y_swi residual policy is enforced *inside* the
+    # MoE layer's custom VJP and applies during the remat replay).  "paper"
+    # saves the tagged GEMM outputs at every layer instead.
+    remat_policy: str = "none"
+    scan_layers: bool = True
+    attn_chunk: int = 512                # flash-attention KV chunk
+    use_pallas: bool = False             # kernel path (single device only)
+    block_causal_skip: bool = True       # skip fully-masked KV chunks (hillclimb)
+    serve_replicate_weights: bool = False  # decode: replicate weights over
+    # the data axes instead of FSDP-sharding them (no per-layer gathers)
+    citation: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def pattern_period(self) -> int:
+        if self.slstm_every:
+            return self.slstm_every
+        if self.local_global_period:
+            return self.local_global_period
+        return 1
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % self.pattern_period == 0
+        return self.num_layers // self.pattern_period
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: <=2 groups, d_model<=512, <=4 experts."""
+        period = self.pattern_period
+        kw = dict(
+            num_layers=2 * period if period > 1 else 2,
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4),
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=64,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            attn_chunk=64,
+            dtype="float32",
+        )
+        if self.is_moe:
+            kw.update(num_experts=4, top_k=min(self.top_k, 2), moe_d_ff=128)
+        if self.ssm_heads:
+            kw.update(ssm_heads=2)
+        if self.num_image_tokens:
+            kw.update(num_image_tokens=16)
+        return self.replace(**kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                            # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    batch_size: int = 8
+    seq_len: int = 256
+    num_microbatches: int = 1            # gradient accumulation
+    seed: int = 0
+    checkpoint_every: int = 0            # 0 -> disabled
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10

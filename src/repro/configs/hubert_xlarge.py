@@ -1,0 +1,14 @@
+"""HuBERT-XLarge: encoder-only audio transformer (w2v2 architecture);
+the mel/conv frontend is a stub — ``input_specs`` provides frame embeddings
+[arXiv:2106.07447]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", arch_type="audio",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    head_dim=80, d_ff=5120, vocab_size=504,
+    ffn_act="gelu", causal=False, input_kind="frames",
+    block_pattern=("attn_ffn",),
+    citation="arXiv:2106.07447",
+)

@@ -1,0 +1,48 @@
+"""Smart activation-checkpoint policies (paper §5.2), framework-wide.
+
+The MoEBlaze layer's custom VJP already enforces the paper's residual set for
+the expert FFN.  For the *rest* of the transformer layer (attention, norms,
+dense FFNs) the same principle — "save GEMM outputs, recompute cheap
+elementwise work" — is expressed as `jax.checkpoint` policies applied to the
+scanned layer body.  Tensors are tagged with `checkpoint_name` at creation.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import checkpoint_policies as cp
+from jax.ad_checkpoint import checkpoint_name
+
+# Canonical tag names used across the model zoo.
+FFN_A = "ffn_a"          # first-projection GEMM output (SiLU branch)
+FFN_B = "ffn_b"          # gate-branch GEMM output
+FFN_YSWI = "ffn_yswi"    # SwiGLU product
+ATTN_OUT = "attn_out"    # attention output projection input
+QKV = "qkv"              # fused QKV projection output
+SSM_STATE = "ssm_state"  # recurrent-scan carry snapshots
+MOE_GATES = "moe_gates"  # router top-k weights
+
+POLICIES = {
+    # Save nothing; recompute the whole layer in backward (max memory saving).
+    "none": cp.nothing_saveable,
+    # Save everything (baseline — what plain autodiff of a scanned layer does).
+    "full": cp.everything_saveable,
+    # Classic: save all matmul outputs.
+    "dots": cp.dots_with_no_batch_dims_saveable,
+    # Paper policy: save the GEMM outputs (A, B, attention projections) and
+    # Y_swi (Algorithm 1 line 11); recompute all other elementwise work.
+    "paper": cp.save_only_these_names(FFN_A, FFN_B, FFN_YSWI, ATTN_OUT, QKV),
+    # Beyond-paper: also drop Y_swi (recompute SiLU(A)·B in backward).
+    "paper_min": cp.save_only_these_names(FFN_A, FFN_B, ATTN_OUT, QKV),
+}
+
+
+def apply_policy(fn, policy: str, prevent_cse: bool = False):
+    """Wrap a layer function with the named checkpoint policy."""
+    if policy == "full":
+        return fn
+    return jax.checkpoint(fn, policy=POLICIES[policy], prevent_cse=prevent_cse)
+
+
+def tag(x, name: str):
+    return checkpoint_name(x, name)

@@ -1,0 +1,229 @@
+"""The MoEBlaze expert layer (paper §3, §5, Algorithm 1).
+
+Forward (paper §3.1): tokens are *never* permuted into per-expert buffers.
+The expert GEMMs consume rows gathered on the fly through
+``dispatch.expert_token_indices``; the SwiGLU epilogue is applied to the
+grouped GEMM outputs; the combine step *gathers* each token's k partial
+outputs through ``dispatch.token_index_map`` and contracts them with the gate
+weights (the TPU-idiomatic rendering of the paper's on-the-fly reduction —
+see DESIGN.md §2).
+
+Backward (paper §3.2 + Algorithm 1): a custom VJP that
+  1. expands the (L, d) output gradient to the (L·k, d) slot gradients via the
+     same index metadata (no materialized forward buffer is needed for this),
+  2. **recomputes SiLU(A)** instead of saving it (paper's smart checkpoint),
+  3. recomputes the input gather ``x[expert_token_indices]`` instead of saving
+     the (L·k, d) routed buffer,
+  4. accumulates token gradients with a scatter-add over the index list.
+
+Residuals saved: ``A``, ``B`` (the two first-layer GEMM outputs) and —
+faithful to Algorithm 1 line 11 — ``Y_swi``.  ``save_yswi=False`` is the
+beyond-paper variant that recomputes ``Y_swi = SiLU(A)·B`` in the backward as
+well, trading one elementwise multiply for another (L·k, h) buffer.
+
+The grouped GEMMs use ``jax.lax.ragged_dot`` at the XLA level; the Pallas
+fused kernels in ``repro.kernels`` implement the same contract with explicit
+VMEM tiling for the TPU target (``interpret=True``-validated here).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.lax import RaggedDotDimensionNumbers, ragged_dot, ragged_dot_general
+
+from repro.core.routing import Dispatch
+
+# ---------------------------------------------------------------------------
+# Grouped-GEMM helpers
+# ---------------------------------------------------------------------------
+
+
+def gmm(lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """Grouped matmul: rows of ``lhs`` (grouped by ``group_sizes``) times the
+    matching ``rhs[g]``.  (L*k, d) @ (E, d, h) -> (L*k, h)."""
+    out = ragged_dot(lhs, rhs, group_sizes,
+                     preferred_element_type=jnp.float32)
+    return out.astype(lhs.dtype)
+
+
+_DW_DIMS = RaggedDotDimensionNumbers(
+    dot_dimension_numbers=(((0,), (0,)), ((), ())),  # contract the row axis
+    lhs_ragged_dimensions=[0],
+    rhs_group_dimensions=[],
+)
+
+
+def gmm_dw(lhs: jax.Array, dout: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """Per-group weight gradient: (L*k, d), (L*k, h) -> (E, d, h)."""
+    out = ragged_dot_general(lhs, dout, group_sizes, _DW_DIMS,
+                             preferred_element_type=jnp.float32)
+    return out.astype(lhs.dtype)
+
+
+def _silu(a):
+    return a * jax.nn.sigmoid(a)
+
+
+def _dsilu(a):
+    s = jax.nn.sigmoid(a)
+    return s * (1.0 + a * (1.0 - s))
+
+
+_ACTS = {
+    "silu": (_silu, _dsilu),
+    "relu": (jax.nn.relu, lambda a: (a > 0).astype(a.dtype)),
+    "gelu": (jax.nn.gelu,
+             lambda a: jax.vmap(jax.grad(lambda t: jax.nn.gelu(t)))(
+                 a.reshape(-1)).reshape(a.shape)),
+}
+
+
+def _gate_per_slot(gates: jax.Array, token_index_map: jax.Array,
+                   num_slots: int) -> jax.Array:
+    """Scatter the (L, k) gate weights into expert-order slots (L*k,)."""
+    return jnp.zeros((num_slots,), gates.dtype).at[
+        token_index_map.reshape(-1)].set(gates.reshape(-1))
+
+
+# ---------------------------------------------------------------------------
+# MoEBlaze SwiGLU layer — custom VJP (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _moe_swiglu(save_yswi: bool, x, w1, w2, w3, gates,
+                eti, off, tim, lens):
+    y, _ = _moe_swiglu_fwd(save_yswi, x, w1, w2, w3, gates, eti, off, tim, lens)
+    return y
+
+
+def _moe_swiglu_fwd(save_yswi, x, w1, w2, w3, gates, eti, off, tim, lens):
+    del off
+    L = x.shape[0]
+    k = tim.shape[1]
+    # On-the-fly gather from the *unpermuted* activations (transient).
+    xg = jnp.take(x, eti, axis=0)                     # (L*k, d)
+    a = gmm(xg, w1, lens)                              # (L*k, h)
+    b = gmm(xg, w2, lens)                              # (L*k, h)
+    y_swi = _silu(a) * b                               # (L*k, h)
+    g_slot = _gate_per_slot(gates, tim, L * k)
+    p_out = gmm(y_swi, w3, lens)                       # (L*k, d) partials
+    # Combine: gather each token's k partials and contract with its gates.
+    parts = jnp.take(p_out, tim.reshape(-1), axis=0).reshape(L, k, -1)
+    y = jnp.einsum("lk,lkd->ld", gates.astype(parts.dtype), parts)
+    res = (x, w1, w2, w3, gates, eti, tim, lens, g_slot,
+           a, b, y_swi if save_yswi else None)
+    return y, res
+
+
+def _moe_swiglu_bwd(save_yswi, res, dy):
+    (x, w1, w2, w3, gates, eti, tim, lens, g_slot, a, b, y_swi) = res
+    if y_swi is None:
+        y_swi = _silu(a) * b                           # beyond-paper recompute
+    # 1. Expert-summation backward: expand (L, d) grads to the slots via the
+    #    index metadata (paper §3.2 step 1) — gather, no materialized buffer.
+    dyg = jnp.take(dy, eti, axis=0)                    # (L*k, d), unscaled
+    # 2. Final-projection grads (Algorithm 1 lines 18-20).
+    dw3 = gmm_dw(y_swi * g_slot[:, None].astype(y_swi.dtype), dyg, lens)
+    dyu = gmm(dyg, jnp.swapaxes(w3, 1, 2), lens)       # (L*k, h), unscaled
+    dgates_slot = jnp.sum(y_swi * dyu, axis=-1)        # (L*k,)
+    dgates = jnp.take(dgates_slot, tim.reshape(-1)).reshape(gates.shape)
+    dgates = dgates.astype(gates.dtype)
+    dy_swi = dyu * g_slot[:, None].astype(dyu.dtype)
+    # 3. SwiGLU backward with SiLU *recomputed* (Algorithm 1 lines 23-28).
+    da = dy_swi * b * _dsilu(a)
+    db = dy_swi * _silu(a)
+    # 4. First-layer grads; the routed-token gather is recomputed, not saved.
+    xg = jnp.take(x, eti, axis=0)
+    dw1 = gmm_dw(xg, da, lens)
+    dw2 = gmm_dw(xg, db, lens)
+    dxg = gmm(da, jnp.swapaxes(w1, 1, 2), lens) + \
+        gmm(db, jnp.swapaxes(w2, 1, 2), lens)
+    # 5. Token-gradient accumulation (paper §3.2 step 3).
+    dx = jnp.zeros_like(x).at[eti].add(dxg.astype(x.dtype))
+    return dx, dw1, dw2, dw3, dgates, None, None, None, None
+
+
+_moe_swiglu.defvjp(_moe_swiglu_fwd, _moe_swiglu_bwd)
+
+
+# ---------------------------------------------------------------------------
+# MoEBlaze plain-MLP layer (SiLU / ReLU / GELU) — paper §6.3 benchmarks
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _moe_mlp(act: str, x, w1, w3, gates, eti, off, tim, lens):
+    y, _ = _moe_mlp_fwd(act, x, w1, w3, gates, eti, off, tim, lens)
+    return y
+
+
+def _moe_mlp_fwd(act, x, w1, w3, gates, eti, off, tim, lens):
+    del off
+    f, _ = _ACTS[act]
+    L, k = tim.shape[0], tim.shape[1]
+    xg = jnp.take(x, eti, axis=0)
+    a = gmm(xg, w1, lens)
+    g_slot = _gate_per_slot(gates, tim, L * k)
+    p_out = gmm(f(a), w3, lens)
+    parts = jnp.take(p_out, tim.reshape(-1), axis=0).reshape(L, k, -1)
+    y = jnp.einsum("lk,lkd->ld", gates.astype(parts.dtype), parts)
+    # Smart checkpoint: save only the GEMM output `a`; act(a) is recomputed.
+    return y, (x, w1, w3, gates, eti, tim, lens, g_slot, a)
+
+
+def _moe_mlp_bwd(act, res, dy):
+    f, df = _ACTS[act]
+    (x, w1, w3, gates, eti, tim, lens, g_slot, a) = res
+    fa = f(a)                                          # recompute (paper §5.2)
+    dyg = jnp.take(dy, eti, axis=0)
+    dw3 = gmm_dw(fa * g_slot[:, None].astype(fa.dtype), dyg, lens)
+    dyu = gmm(dyg, jnp.swapaxes(w3, 1, 2), lens)
+    dgates_slot = jnp.sum(fa * dyu, axis=-1)
+    dgates = jnp.take(dgates_slot, tim.reshape(-1)).reshape(gates.shape)
+    dgates = dgates.astype(gates.dtype)
+    da = dyu * g_slot[:, None].astype(dyu.dtype) * df(a)
+    xg = jnp.take(x, eti, axis=0)
+    dw1 = gmm_dw(xg, da, lens)
+    dxg = gmm(da, jnp.swapaxes(w1, 1, 2), lens)
+    dx = jnp.zeros_like(x).at[eti].add(dxg.astype(x.dtype))
+    return dx, dw1, dw3, dgates, None, None, None, None
+
+
+_moe_mlp.defvjp(_moe_mlp_fwd, _moe_mlp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn_blaze(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
+                  w1: jax.Array, w3: jax.Array, w2: jax.Array | None = None,
+                  *, activation: str = "swiglu",
+                  save_yswi: bool = True) -> jax.Array:
+    """MoEBlaze expert FFN.
+
+    Args:
+      x: (L, d) unpermuted token activations.
+      gates: (L, k) gate weights for the chosen experts.
+      dispatch: index metadata from :func:`repro.core.routing.build_dispatch`.
+      w1: (E, d, h) first projection (the SiLU branch for SwiGLU).
+      w2: (E, d, h) gate-branch projection (SwiGLU only).
+      w3: (E, h, d) down projection.
+      activation: "swiglu" | "silu" | "relu" | "gelu".
+      save_yswi: paper-faithful (True) saves Y_swi; False recomputes it.
+    """
+    d = dispatch
+    if activation == "swiglu":
+        assert w2 is not None
+        return _moe_swiglu(save_yswi, x, w1, w2, w3, gates,
+                           d.expert_token_indices, d.expert_token_offsets,
+                           d.token_index_map, d.expert_lengths)
+    assert w2 is None or activation == "swiglu"
+    return _moe_mlp(activation, x, w1, w3, gates,
+                    d.expert_token_indices, d.expert_token_offsets,
+                    d.token_index_map, d.expert_lengths)

@@ -1,0 +1,65 @@
+"""Gather-of-partials combine kernel (paper §3.1 output aggregation).
+
+Each token gathers its ``k`` partial expert outputs through
+``token_index_map`` and contracts them with its gate weights — the
+deterministic, gather-based TPU rendering of the paper's on-the-fly reduction
+(no scatter, no materialized (L·k, d) buffer; see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _combine_kernel(tim_ref, p_ref, g_ref, y_ref, *, bl: int, k: int,
+                    n_rows: int):
+    t = pl.program_id(0)
+
+    def row(r, _):
+        tok = t * bl + r
+        valid = tok < n_rows
+        acc = jnp.zeros((1, p_ref.shape[1]), jnp.float32)
+        for i in range(k):                       # k is small and static
+            slot = jnp.where(valid, tim_ref[tok * k + i], 0)
+            part = pl.load(p_ref, (pl.ds(slot, 1), slice(None)))
+            acc = acc + g_ref[r, i].astype(jnp.float32) * \
+                part.astype(jnp.float32)
+        y_ref[pl.ds(r, 1), :] = acc.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bl, row, 0, unroll=False)
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "bd", "interpret"))
+def combine(p_out: jax.Array, token_index_map: jax.Array, gates: jax.Array,
+            *, bl: int = 128, bd: int = 512, interpret: bool = True):
+    """(S, d) partials + (L, k) map + (L, k) gates -> (L, d) output."""
+    S, d = p_out.shape
+    L, k = token_index_map.shape
+    bl = min(bl, L)
+    bd = min(bd, d)
+    assert d % bd == 0
+    L_pad = ((L + bl - 1) // bl) * bl
+    tim = token_index_map.reshape(-1).astype(jnp.int32)
+    g = jnp.pad(gates, ((0, L_pad - L), (0, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(L_pad // bl, d // bd),
+        in_specs=[
+            pl.BlockSpec((S, bd), lambda t, dd, tim_r: (0, dd)),
+            pl.BlockSpec((bl, k), lambda t, dd, tim_r: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((bl, bd), lambda t, dd, tim_r: (t, dd)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_combine_kernel, bl=bl, k=k, n_rows=L),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L_pad, d), p_out.dtype),
+        interpret=interpret,
+    )(tim, p_out, g)
+    return y[:L]

@@ -1,0 +1,131 @@
+"""Pallas dispatch-structure construction (paper §4.2), TPU rendering.
+
+The paper's GPU pipeline is 3 atomic-free steps: dense token→expert bitmap,
+per-expert lengths via warp reductions, then a location map from CTA-local
+exclusive scans + global offsets.  On TPU the grid executes **sequentially**
+per core, so a running per-expert counter carried in VMEM scratch across grid
+steps *is* the exclusive scan — two single-pass kernels suffice:
+
+  1. ``count`` — per-expert lengths (tile-local one-hot column sums,
+     accumulated into the output across grid steps).
+  2. ``route`` — per-slot destination = global offset (scalar input) +
+     carried counter + tile-local exclusive scan; writes
+     ``expert_token_indices`` via per-row dynamic stores and emits the flat
+     ``token_index_map``.
+
+Padding slots carry the sentinel expert id ``E`` and are masked everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.routing import Dispatch
+
+
+def _count_kernel(tei_ref, len_ref, *, num_experts: int, bl: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        len_ref[...] = jnp.zeros_like(len_ref)
+
+    e = tei_ref[...]                                        # (bl,)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bl, num_experts), 1)
+    onehot = (e[:, None] == iota).astype(jnp.int32)         # sentinel E -> 0
+    len_ref[...] += onehot.sum(axis=0)
+
+
+def _route_kernel(tei_ref, off_ref, dest_ref, eti_ref, counters,
+                  *, num_experts: int, bl: int, k: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        counters[...] = jnp.zeros_like(counters)
+
+    e = tei_ref[...]                                        # (bl,)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bl, num_experts), 1)
+    onehot = (e[:, None] == iota).astype(jnp.int32)
+    local_excl = jnp.cumsum(onehot, axis=0) - onehot        # tile-local scan
+    cnt = counters[...]
+    off = off_ref[...]
+    # Per-row base = offsets[e] + carried counter[e]; VPU-friendly one-hot
+    # contractions instead of vector gathers.
+    base = (onehot * (off[None, :num_experts] + cnt[None, :])).sum(axis=1)
+    rank = (onehot * local_excl).sum(axis=1)
+    dest = base + rank                                      # (bl,)
+    valid = e < num_experts
+    dest_ref[...] = jnp.where(valid, dest, 0)
+
+    def write_row(r, _):
+        slot = step * bl + r
+
+        @pl.when(valid[r])
+        def _w():
+            eti_ref[pl.ds(dest[r], 1)] = (slot // k)[None].astype(jnp.int32)
+
+        return 0
+
+    jax.lax.fori_loop(0, bl, write_row, 0, unroll=False)
+    counters[...] = cnt + onehot.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "k", "bl",
+                                             "interpret"))
+def build_dispatch_pallas(topk_experts: jax.Array, num_experts: int,
+                          *, k: int | None = None, bl: int = 256,
+                          interpret: bool = True) -> Dispatch:
+    """Drop-in replacement for :func:`repro.core.routing.build_dispatch`."""
+    L, kk = topk_experts.shape
+    k = kk if k is None else k
+    flat = topk_experts.reshape(L * k).astype(jnp.int32)
+    n = L * k
+    bl = min(bl, n)
+    n_pad = ((n + bl - 1) // bl) * bl
+    tei = jnp.pad(flat, (0, n_pad - n), constant_values=num_experts)
+    n_tiles = n_pad // bl
+
+    lengths = pl.pallas_call(
+        functools.partial(_count_kernel, num_experts=num_experts, bl=bl),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((bl,), lambda t: (t,))],
+        out_specs=pl.BlockSpec((num_experts,), lambda t: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_experts,), jnp.int32),
+        interpret=interpret,
+    )(tei)
+
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(lengths)]).astype(jnp.int32)
+
+    dest_pad, eti = pl.pallas_call(
+        functools.partial(_route_kernel, num_experts=num_experts, bl=bl, k=k),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((bl,), lambda t: (t,)),
+            pl.BlockSpec((num_experts + 1,), lambda t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bl,), lambda t: (t,)),
+            pl.BlockSpec((n,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((num_experts,), jnp.int32)],
+        interpret=interpret,
+    )(tei, offsets)
+
+    return Dispatch(
+        expert_token_indices=eti,
+        expert_token_offsets=offsets,
+        token_expert_indices=flat,
+        token_index_map=dest_pad[:n].reshape(L, k),
+        expert_lengths=lengths,
+    )

@@ -1,0 +1,218 @@
+"""Gather-GMM: grouped expert GEMMs with on-the-fly token gather (paper §3.1
++ §5.2), as a Pallas TPU kernel.
+
+This is the kernel rendering of the paper's central claim: the expert MLPs
+consume **non-materialized** routed tokens.  The `(L·k, d)` routed buffer
+never exists in HBM; instead the kernel is driven by the scalar-prefetched
+``expert_token_indices`` and DMA-gathers the needed rows of the *unpermuted*
+``x`` per tile, streams them through the expert's projections (optionally both
+SwiGLU branches at once, sharing the single read of the gathered rows), and
+applies the SiLU·gate epilogue in VMEM.
+
+Group-crossing tiles are handled MegaBlocks-style: the wrapper precomputes a
+static work-item list (one item per (row-tile × overlapping expert); at most
+``n_tiles + E`` items) whose metadata — tile id, expert id, row range inside
+the tile, first-visit flag — is scalar-prefetched so that the weight
+BlockSpec's ``index_map`` can select ``w[expert]`` per work item.  Output
+tiles visited by several experts are accumulated in VMEM across consecutive
+grid steps (TPU grids are sequential per core).
+
+On this CPU container the kernel runs in ``interpret=True`` mode; ``x`` is
+held as a single VMEM block for kernel-scale shapes.  On a real TPU the same
+grid/work-item structure applies with ``x`` in ``ANY`` (HBM) memory space and
+per-row ``make_async_copy`` gathers — the row (``d`` contiguous elements) is
+the natural DMA unit, see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _silu(a):
+    return a * jax.nn.sigmoid(a)
+
+
+def make_work_items(offsets: jax.Array, n_tiles: int, bl: int,
+                    num_experts: int):
+    """Static-shape (tile × expert) work-item metadata.
+
+    Returns int32 arrays of length ``W = n_tiles + num_experts``:
+      (tile, expert, lo, hi, first) — ``[lo, hi)`` is the row range of
+    ``expert`` inside ``tile``; ``first`` marks the first item of each tile
+    (which must initialize the output block).  Invalid trailing items point at
+    the last tile with an empty range (benign += 0).
+    """
+    E = num_experts
+    W = n_tiles + E
+    t = jnp.arange(n_tiles, dtype=jnp.int32)[:, None]           # (T, 1)
+    lo = jnp.clip(offsets[None, :E] - t * bl, 0, bl)             # (T, E)
+    hi = jnp.clip(offsets[None, 1:] - t * bl, 0, bl)             # (T, E)
+    valid = (hi > lo)
+    flat_valid = valid.reshape(-1)
+    rank = jnp.cumsum(flat_valid) - flat_valid                   # dest slot
+    first = valid & (jnp.cumsum(valid, axis=1) == 1)
+
+    def scatter(vals, fill):
+        out = jnp.full((W,), fill, jnp.int32)
+        return out.at[jnp.where(flat_valid, rank, W - 1)].set(
+            jnp.where(flat_valid, vals.reshape(-1).astype(jnp.int32), fill),
+            mode="drop")
+
+    n_valid = flat_valid.sum()
+    ex = jnp.broadcast_to(jnp.arange(E, dtype=jnp.int32)[None, :],
+                          (n_tiles, E))
+    tiles = jnp.broadcast_to(t, (n_tiles, E))
+    wi_tile = scatter(tiles, n_tiles - 1)
+    wi_expert = scatter(ex, 0)
+    wi_lo = scatter(lo, 0)
+    wi_hi = scatter(hi, 0)
+    wi_first = scatter(first, 0)
+    # Anything at rank >= n_valid is a filler: empty range on the last tile.
+    fill_mask = jnp.arange(W) >= n_valid
+    wi_tile = jnp.where(fill_mask, n_tiles - 1, wi_tile)
+    wi_lo = jnp.where(fill_mask, 0, wi_lo)
+    wi_hi = jnp.where(fill_mask, 0, wi_hi)
+    wi_first = jnp.where(fill_mask, 0, wi_first)
+    return wi_tile, wi_expert, wi_lo, wi_hi, wi_first
+
+
+def _kernel(idx_ref, tile_ref, expert_ref, lo_ref, hi_ref, first_ref,
+            x_ref, w1_ref, w2_ref, y_ref, a_ref, b_ref, xt_ref,
+            *, bl: int, dual: bool, epilogue: bool):
+    wi = pl.program_id(0)
+    tile = tile_ref[wi]
+    lo, hi = lo_ref[wi], hi_ref[wi]
+    first = first_ref[wi] == 1
+
+    # --- on-the-fly gather of this work item's rows into VMEM -------------
+    def gather_row(r, _):
+        active = (r >= lo) & (r < hi)
+        tok = jnp.where(active, idx_ref[tile * bl + r], 0)
+        row = pl.load(x_ref, (pl.ds(tok, 1), slice(None)))
+        xt_ref[pl.ds(r, 1), :] = jnp.where(active, row, 0)
+        return 0
+
+    jax.lax.fori_loop(0, bl, gather_row, 0, unroll=False)
+
+    xt = xt_ref[...]
+    a = jnp.dot(xt, w1_ref[0], preferred_element_type=jnp.float32)
+    if dual:
+        b = jnp.dot(xt, w2_ref[0], preferred_element_type=jnp.float32)
+        y = _silu(a) * b if epilogue else a
+    else:
+        b = None
+        y = a
+
+    def acc(ref, val):
+        @pl.when(first)
+        def _init():
+            ref[...] = val.astype(ref.dtype)
+
+        @pl.when(jnp.logical_not(first))
+        def _acc():
+            ref[...] += val.astype(ref.dtype)
+
+    acc(y_ref, y)
+    if a_ref is not None:
+        acc(a_ref, a)
+    if dual and b_ref is not None:
+        acc(b_ref, b)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bl", "bh", "epilogue", "save_ab", "interpret"))
+def gather_gmm(x: jax.Array, idx: jax.Array, offsets: jax.Array,
+               w1: jax.Array, w2: jax.Array | None = None,
+               *, bl: int = 128, bh: int = 128, epilogue: bool = True,
+               save_ab: bool = False, interpret: bool = True):
+    """Grouped matmul over gathered rows.
+
+    Args:
+      x: (L, d) unpermuted activations.
+      idx: (S,) row ids grouped by expert (``expert_token_indices``).
+      offsets: (E+1,) exclusive prefix sums (``expert_token_offsets``).
+      w1: (E, d, h); w2: optional (E, d, h) SwiGLU gate branch.
+      epilogue: apply ``silu(a)·b`` (requires w2).
+      save_ab: also return the checkpointed GEMM outputs a (and b).
+
+    Returns ``y`` of shape (S, h) — or ``(y, a[, b])`` when ``save_ab``.
+    """
+    S, = idx.shape
+    L, d = x.shape
+    E, _, h = w1.shape
+    dual = w2 is not None
+    bl = min(bl, max(S, 8))
+    bh = min(bh, h)
+    S_pad = ((S + bl - 1) // bl) * bl
+    idx_p = jnp.pad(idx.astype(jnp.int32), (0, S_pad - S))
+    n_tiles = S_pad // bl
+    assert h % bh == 0
+    nh = h // bh
+    wi_tile, wi_expert, wi_lo, wi_hi, wi_first = make_work_items(
+        offsets.astype(jnp.int32), n_tiles, bl, E)
+    W = wi_tile.shape[0]
+
+    n_out = 1 + (1 if save_ab else 0) + (1 if (save_ab and dual) else 0)
+    out_shape = [jax.ShapeDtypeStruct((S_pad, h), x.dtype)] * n_out
+    out_specs = [pl.BlockSpec((bl, bh), lambda wi, hh, *s: (tile_map(wi, s), hh))
+                 for _ in range(n_out)]
+
+    # index_map helpers get the scalar-prefetch refs appended.
+    def tile_map(wi, scalars):
+        return scalars[1][wi]          # wi_tile
+
+    def x_map(wi, hh, *scalars):
+        return (0, 0)
+
+    def w_map(wi, hh, *scalars):
+        return (scalars[2][wi], 0, hh)  # wi_expert
+
+    in_specs = [
+        pl.BlockSpec((L, d), x_map),
+        pl.BlockSpec((1, d, bh), w_map),
+    ]
+    args = [x, w1]
+    if dual:
+        in_specs.append(pl.BlockSpec((1, d, bh), w_map))
+        args.append(w2)
+
+    kernel = functools.partial(
+        _kernel, bl=bl, dual=dual, epilogue=epilogue and dual)
+
+    def body(*refs):
+        scalars = refs[:6]
+        if dual:
+            x_r, w1_r, w2_r = refs[6:9]
+            outs = refs[9:9 + n_out]
+            scratch = refs[9 + n_out]
+        else:
+            x_r, w1_r = refs[6:8]
+            w2_r = None
+            outs = refs[8:8 + n_out]
+            scratch = refs[8 + n_out]
+        y_r = outs[0]
+        a_r = outs[1] if save_ab else None
+        b_r = outs[2] if (save_ab and dual) else None
+        kernel(*scalars, x_r, w1_r, w2_r, y_r, a_r, b_r, scratch)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(W, nh),
+        in_specs=in_specs,
+        out_specs=out_specs if n_out > 1 else out_specs[0],
+        scratch_shapes=[pltpu.VMEM((bl, d), x.dtype)],
+    )
+    out = pl.pallas_call(
+        body, grid_spec=grid_spec,
+        out_shape=out_shape if n_out > 1 else out_shape[0],
+        interpret=interpret,
+    )(idx_p, wi_tile, wi_expert, wi_lo, wi_hi, wi_first, *args)
+    if n_out == 1:
+        return out[:S]
+    return tuple(o[:S] for o in out)

@@ -1,0 +1,131 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; the kernels target
+TPU and are validated in interpret mode against ``ref.py``).  On TPU, call
+with ``interpret=False``.
+
+``moe_ffn_blaze_pallas`` composes the kernels into the full MoEBlaze expert
+layer — dispatch build, gather-GMM with fused SwiGLU epilogue, second grouped
+GEMM, gather-of-partials combine — with a custom VJP that mirrors
+Algorithm 1 (SiLU recomputed; routed buffers never materialized).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing import Dispatch
+from repro.kernels.combine import combine
+from repro.kernels.dispatch import build_dispatch_pallas
+from repro.kernels.fused_swiglu import (fused_swiglu_bwd_w, fused_swiglu_bwd_x,
+                                        fused_swiglu_fwd)
+from repro.kernels.gather_gmm import gather_gmm
+
+__all__ = [
+    "fused_swiglu_fwd", "fused_swiglu_bwd_x", "fused_swiglu_bwd_w",
+    "gather_gmm", "combine", "build_dispatch_pallas", "swiglu",
+    "moe_ffn_blaze_pallas",
+]
+
+
+# ---------------------------------------------------------------------------
+# Dense fused SwiGLU with the paper's checkpoint policy, as a differentiable
+# op (used by the dense-arch FFNs when kernels are enabled).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def swiglu(x, w1, w2):
+    y, _, _ = fused_swiglu_fwd(x, w1, w2)
+    return y
+
+
+def _swiglu_fwd(x, w1, w2):
+    y, a, b = fused_swiglu_fwd(x, w1, w2)
+    return y, (x, w1, w2, a, b)           # checkpoint: only the GEMM outputs
+
+
+def _swiglu_bwd(res, dy):
+    x, w1, w2, a, b = res
+    dx = fused_swiglu_bwd_x(dy, a, b, w1, w2)
+    dw1, dw2 = fused_swiglu_bwd_w(x, dy, a, b)
+    return dx, dw1, dw2
+
+
+swiglu.defvjp(_swiglu_fwd, _swiglu_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Full MoEBlaze expert layer out of Pallas kernels.
+# ---------------------------------------------------------------------------
+
+
+def _silu(a):
+    return a * jax.nn.sigmoid(a)
+
+
+def _dsilu(a):
+    s = jax.nn.sigmoid(a)
+    return s * (1.0 + a * (1.0 - s))
+
+
+@jax.custom_vjp
+def _moe_pallas(x, w1, w2, w3, gates, eti, off, tim, lens):
+    y, _ = _moe_pallas_fwd(x, w1, w2, w3, gates, eti, off, tim, lens)
+    return y
+
+
+def _moe_pallas_fwd(x, w1, w2, w3, gates, eti, off, tim, lens):
+    S = eti.shape[0]
+    # Fused gather + dual GEMM + SwiGLU epilogue (paper §5.2 kernel).
+    y_swi, a, b = gather_gmm(x, eti, off, w1, w2, save_ab=True)
+    # Second grouped GEMM (identity gather: rows already in expert order).
+    p_out = gather_gmm(y_swi, jnp.arange(S, dtype=jnp.int32), off, w3,
+                       epilogue=False)
+    y = combine(p_out, tim, gates)
+    return y, (x, w1, w2, w3, gates, eti, off, tim, lens, a, b, y_swi)
+
+
+def _moe_pallas_bwd(res, dy):
+    (x, w1, w2, w3, gates, eti, off, tim, lens, a, b, y_swi) = res
+    L, k = tim.shape
+    S = eti.shape[0]
+    ident = jnp.arange(S, dtype=jnp.int32)
+    g_slot = jnp.zeros((S,), gates.dtype).at[tim.reshape(-1)].set(
+        gates.reshape(-1))
+    # Expand output grads to slots (gather through the index metadata).
+    dyg = jnp.take(dy, eti, axis=0)
+    # dW3 / dY_swi via grouped GEMMs (gather_gmm with identity index).
+    from repro.core.moe_layer import gmm_dw
+    dw3 = gmm_dw(y_swi * g_slot[:, None].astype(y_swi.dtype), dyg, lens)
+    dyu = gather_gmm(dyg, ident, off, jnp.swapaxes(w3, 1, 2), epilogue=False)
+    dgates = jnp.take(jnp.sum(y_swi * dyu, -1),
+                      tim.reshape(-1)).reshape(gates.shape).astype(gates.dtype)
+    dy_swi = dyu * g_slot[:, None].astype(dyu.dtype)
+    # Fused SwiGLU backward (SiLU recomputed inside the kernels).
+    from repro.core.moe_layer import gmm
+    da = dy_swi * b * _dsilu(a)
+    db = dy_swi * _silu(a)
+    xg = jnp.take(x, eti, axis=0)
+    dw1 = gmm_dw(xg, da, lens)
+    dw2 = gmm_dw(xg, db, lens)
+    dxg = gmm(da, jnp.swapaxes(w1, 1, 2), lens) + \
+        gmm(db, jnp.swapaxes(w2, 1, 2), lens)
+    dx = jnp.zeros_like(x).at[eti].add(dxg.astype(x.dtype))
+    return dx, dw1, dw2, dw3, dgates, None, None, None, None
+
+
+_moe_pallas.defvjp(_moe_pallas_fwd, _moe_pallas_bwd)
+
+
+def moe_ffn_blaze_pallas(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
+                         w1: jax.Array, w3: jax.Array,
+                         w2: jax.Array) -> jax.Array:
+    """Kernel-composed MoEBlaze SwiGLU expert layer (single device)."""
+    d = dispatch
+    return _moe_pallas(x, w1, w2, w3, gates.astype(x.dtype),
+                       d.expert_token_indices, d.expert_token_offsets,
+                       d.token_index_map, d.expert_lengths)

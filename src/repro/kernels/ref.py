@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing import Dispatch, build_dispatch
+
+
+def silu(a):
+    return a * jax.nn.sigmoid(a)
+
+
+def fused_swiglu_fwd_ref(x, w1, w2):
+    a = (x.astype(jnp.float32) @ w1.astype(jnp.float32))
+    b = (x.astype(jnp.float32) @ w2.astype(jnp.float32))
+    y = silu(a) * b
+    return y.astype(x.dtype), a.astype(x.dtype), b.astype(x.dtype)
+
+
+def fused_swiglu_bwd_x_ref(dy, a, b, w1, w2):
+    dy, a, b = (t.astype(jnp.float32) for t in (dy, a, b))
+    s = jax.nn.sigmoid(a)
+    da = dy * b * (s * (1 + a * (1 - s)))
+    db = dy * silu(a)
+    dx = da.astype(w1.dtype) @ w1.T + db.astype(w2.dtype) @ w2.T
+    return dx.astype(dy.dtype)
+
+
+def fused_swiglu_bwd_w_ref(x, dy, a, b):
+    dy, a, b = (t.astype(jnp.float32) for t in (dy, a, b))
+    s = jax.nn.sigmoid(a)
+    da = (dy * b * (s * (1 + a * (1 - s)))).astype(x.dtype)
+    db = (dy * silu(a)).astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    dw1 = xf.T @ da.astype(jnp.float32)
+    dw2 = xf.T @ db.astype(jnp.float32)
+    return dw1.astype(x.dtype), dw2.astype(x.dtype)
+
+
+def gather_gmm_ref(x, idx, offsets, w1, w2=None, *, epilogue=True):
+    """Gather rows then grouped matmul (materialized — the thing the kernel
+    avoids), as the correctness oracle."""
+    xg = jnp.take(x, idx, axis=0).astype(jnp.float32)
+    lens = jnp.diff(offsets)
+    a = jax.lax.ragged_dot(xg, w1.astype(jnp.float32), lens)
+    if w2 is None:
+        return a.astype(x.dtype)
+    b = jax.lax.ragged_dot(xg, w2.astype(jnp.float32), lens)
+    y = silu(a) * b if epilogue else a
+    return (y.astype(x.dtype), a.astype(x.dtype), b.astype(x.dtype))
+
+
+def combine_ref(p_out, token_index_map, gates):
+    L, k = token_index_map.shape
+    parts = jnp.take(p_out, token_index_map.reshape(-1), axis=0)
+    parts = parts.reshape(L, k, -1).astype(jnp.float32)
+    return jnp.einsum("lk,lkd->ld", gates.astype(jnp.float32),
+                      parts).astype(p_out.dtype)
+
+
+def build_dispatch_ref(topk_experts, num_experts) -> Dispatch:
+    return build_dispatch(topk_experts, num_experts)

@@ -1,0 +1,323 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and report memory/cost/roofline terms.
+
+The XLA host-device override MUST precede any jax import (jax locks the
+device count on first init) — hence the first two lines.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out EXPERIMENTS/dryrun.jsonl
+"""
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import sharding as shd                      # noqa: E402
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.configs.base import TrainConfig             # noqa: E402
+from repro.launch import specs as S                    # noqa: E402
+from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.models import transformer as T              # noqa: E402
+from repro.roofline import analyze_compiled            # noqa: E402
+from repro.train.loop import make_train_step           # noqa: E402
+from repro.train.optimizer import init_adamw           # noqa: E402
+
+
+def _num_microbatches(shape, mesh, cfg=None) -> int:
+    """Gradient accumulation count: smallest power-of-two M (up to one
+    sequence per device) that keeps the layer-scan residual carries — the
+    dominant train-memory term under full per-layer remat — under ~3.5 GiB
+    per device."""
+    n_dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_dp *= mesh.shape[a]
+    m_cap = max(shape.global_batch // n_dp, 1)
+    if cfg is None:
+        return min(8, m_cap)
+    budget = 3.5 * 2 ** 30
+    M = 1
+    while M < m_cap:
+        tokens_per_dev = shape.global_batch * shape.seq_len / (n_dp * M)
+        carry = cfg.num_layers * tokens_per_dev * cfg.d_model * 2
+        if carry <= budget and M >= min(8, m_cap):
+            break
+        M *= 2
+    return min(M, m_cap)
+
+
+def _prefill_chunks(cfg, shape, mesh) -> int:
+    """Chunked prefill (vLLM-style) for MoE archs: bound the dense-dispatch
+    buffers while keeping each chunk's batch shardable over the data axes."""
+    if not cfg.is_moe:
+        return 1
+    n_dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_dp *= mesh.shape[a]
+    return max(1, shape.global_batch // n_dp)
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, cfg_overrides=None,
+                    shape=None, microbatches=None):
+    """Returns (fn, example_args, in_shardings) for jit.
+
+    MoE archs lower the GShard dense-dispatch formulation by default: XLA's
+    *CPU* decomposition of ragged_dot is dense-per-group (E x temps/FLOPs),
+    which is an artifact of this container, not of the TPU target — the
+    dense-dispatch graph has the same collectives and fits.  The TPU gmm
+    cost is modelled by the 'proxy_gmm' probes (see run_one).
+    """
+    cfg = get_config(arch)
+    if cfg.is_moe and not (cfg_overrides and "moe_impl" in cfg_overrides):
+        cfg = cfg.replace(moe_impl="dense")
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = shape or INPUT_SHAPES[shape_name]
+    skip = S.applicable(cfg, shape)
+    if skip:
+        return None, skip, cfg
+    pshapes = S.params_shapes(cfg)
+    fsdp = not (shape.kind == "decode" and cfg.serve_replicate_weights)
+    pspecs = shd.param_specs(pshapes, mesh, fsdp=fsdp,
+                             moe_parallel=cfg.moe_parallel)
+
+    if shape.kind == "train":
+        M = microbatches if microbatches is not None \
+            else _num_microbatches(shape, mesh, cfg)
+        tcfg = TrainConfig(num_microbatches=M)
+        oshapes = jax.eval_shape(init_adamw, pshapes)
+        ospecs = shd.opt_specs(pspecs)
+        bshapes = S.batch_shapes(cfg, shape)
+        bspecs = shd.batch_specs(cfg, bshapes, mesh)
+        fn = make_train_step(cfg, tcfg, mesh=mesh)
+        args = (pshapes, oshapes, bshapes)
+        in_specs = (pspecs, ospecs, bspecs)
+    elif shape.kind == "prefill":
+        bshapes = S.batch_shapes(cfg, shape)
+        bspecs = shd.batch_specs(cfg, bshapes, mesh)
+        Mp = _prefill_chunks(cfg, shape, mesh) if microbatches is None \
+            else microbatches
+
+        def fn(params, batch):
+            # Prefill emits only the last-position logits (the first sampled
+            # token) — materializing (B, S, vocab) would be absurd at 32k.
+            # MoE archs chunk the request batch (vLLM-style chunked prefill)
+            # to bound the dense-dispatch buffers.
+            if Mp > 1:
+                mb = jax.tree.map(
+                    lambda x: x.reshape(Mp, x.shape[0] // Mp, *x.shape[1:]),
+                    batch)
+
+                def body(_, one):
+                    lg, aux = T.forward(params, one, cfg, mesh=mesh,
+                                        last_only=True)
+                    return None, (lg[:, -1, :], aux)
+
+                _, (lg, aux) = jax.lax.scan(body, None, mb)
+                return lg.reshape(shape.global_batch, -1), aux.mean()
+            logits, aux = T.forward(params, batch, cfg, mesh=mesh,
+                                    last_only=True)
+            return logits[:, -1, :], aux
+
+        args = (pshapes, bshapes)
+        in_specs = (pspecs, bspecs)
+    else:  # decode
+        # Serving uses bf16 weights (production standard; f32 masters are a
+        # training concern) — re-derive param shapes in the serving dtype.
+        cfg = cfg.replace(param_dtype="bfloat16")
+        pshapes = S.params_shapes(cfg)
+        pspecs = shd.param_specs(pshapes, mesh, fsdp=fsdp,
+                                 moe_parallel=cfg.moe_parallel)
+        ds = S.decode_shapes(cfg, shape)
+        cspecs = shd.cache_specs(cfg, ds["cache"], mesh)
+        tok_spec = shd.batch_specs(cfg, {"tokens": ds["tokens"]}, mesh)
+
+        def fn(params, cache, tokens, pos):
+            return T.decode_step(params, cache, {"tokens": tokens}, pos,
+                                 cfg, mesh=mesh)
+
+        args = (pshapes, ds["cache"], ds["tokens"], ds["pos"])
+        in_specs = (pspecs, cspecs, tok_spec["tokens"], jax.sharding.PartitionSpec())
+
+    shardings = shd.to_shardings(mesh, in_specs)
+    return (fn, args, shardings), None, cfg
+
+
+def _compile_once(arch, shape_name, mesh, cfg_overrides, shape=None,
+                  microbatches=None):
+    built, skip, cfg = build_lowerable(arch, shape_name, mesh, cfg_overrides,
+                                       shape=shape, microbatches=microbatches)
+    if skip:
+        return None, skip, cfg
+    fn, args, shardings = built
+    # Serving always donates the cache (in-place update); without donation
+    # XLA double-buffers the multi-GiB cache as a temp.
+    donate = (1,) if (shape or INPUT_SHAPES[shape_name]).kind == "decode" \
+        else ()
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+    return (compiled, t_lower, t_compile), None, cfg
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            cfg_overrides=None, verbose: bool = True,
+            cost_probe: bool = True, microbatches: int | None = None) -> dict:
+    """Dry-run one (arch x shape x mesh).
+
+    The full scanned model is lowered+compiled (memory analysis, proof of
+    lowering).  Because ``cost_analysis`` counts a ``while`` (layer-scan) body
+    only once, FLOPs/bytes/collectives are measured from two *unrolled*
+    probes (1 and 2 pattern-groups) and extrapolated linearly:
+    ``full = B + (G-1)·(C-B)`` — exact for homogeneous layer stacks.
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    out, skip, cfg = _compile_once(arch, shape_name, mesh, cfg_overrides,
+                                   microbatches=microbatches)
+    if skip:
+        rec["status"] = f"SKIP({skip})"
+        return rec
+    compiled, t_lower, t_compile = out
+    full = analyze_compiled(compiled, cfg, INPUT_SHAPES[shape_name],
+                            n_chips=mesh.devices.size)
+    rec.update(status="OK", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), **full)
+
+    if cost_probe and cfg.num_groups > 1:
+        period = cfg.pattern_period
+        shape = INPUT_SHAPES[shape_name]
+        # The probes must not hide cost inside a second (microbatch) scan:
+        # train probes lower ONE microbatch and scale the result by M.
+        M = 1
+        if shape.kind == "train":
+            M = microbatches if microbatches is not None \
+                else _num_microbatches(shape, mesh, cfg)
+        elif shape.kind == "prefill":
+            M = microbatches if microbatches is not None \
+                else _prefill_chunks(cfg, shape, mesh)
+        pshape = shape
+        if M > 1:
+            import dataclasses
+            pshape = dataclasses.replace(
+                shape, global_batch=shape.global_batch // M)
+        probes = []
+        for g in (1, 2):
+            ov = dict(cfg_overrides or {})
+            ov.update(num_layers=g * period, scan_layers=False)
+            if cfg.is_moe:
+                # TPU-gmm cost model (see build_lowerable docstring).
+                ov.setdefault("moe_impl", "proxy_gmm")
+            pout, pskip, pcfg = _compile_once(
+                arch, shape_name, mesh, ov, shape=pshape, microbatches=1)
+            assert pskip is None
+            probes.append(analyze_compiled(
+                pout[0], pcfg, INPUT_SHAPES[shape_name],
+                n_chips=mesh.devices.size))
+        b, c = probes
+        G = cfg.num_groups
+
+        def extrap(key):
+            # clamp: XLA occasionally optimizes the 2-group probe harder than
+            # the 1-group one, which would extrapolate below zero
+            return max(0.0, M * (b[key] + (G - 1) * (c[key] - b[key])))
+
+        from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+        rec["flops_per_dev"] = extrap("flops_per_dev")
+        rec["hlo_bytes_per_dev"] = extrap("hlo_bytes_per_dev")
+        rec["collective_bytes"] = extrap("collective_bytes")
+        rec["collective_counts"] = {
+            k: max(0, b["collective_counts"][k] +
+                   (G - 1) * (c["collective_counts"][k]
+                              - b["collective_counts"][k]))
+            for k in b["collective_counts"]}
+        rec["t_compute_s"] = rec["flops_per_dev"] / PEAK_FLOPS_BF16
+        rec["t_memory_s"] = rec["hlo_bytes_per_dev"] / HBM_BW
+        rec["t_collective_s"] = rec["collective_bytes"] / ICI_BW_PER_LINK
+        rec["dominant"] = max(
+            (("compute", rec["t_compute_s"]), ("memory", rec["t_memory_s"]),
+             ("collective", rec["t_collective_s"])), key=lambda kv: kv[1])[0]
+        rec["useful_flops_ratio"] = rec["model_flops_global"] / max(
+            rec["flops_per_dev"] * mesh.devices.size, 1.0)
+        rec["cost_probe"] = "extrapolated(1,2 groups unrolled)"
+
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+              f"args={rec['arg_bytes']/2**30:.2f}GiB "
+              f"temp={rec['temp_bytes']/2**30:.2f}GiB "
+              f"peak={rec['peak_bytes']/2**30:.2f}GiB/dev "
+              f"fits={rec['fits_hbm']} | flops/dev={rec['flops_per_dev']:.3e} "
+              f"coll={rec['collective_bytes']/2**20:.1f}MiB "
+              f"dominant={rec['dominant']}")
+        print("  memory_analysis:", compiled.memory_analysis())
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig overrides (hillclimbing)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the cost-extrapolation probes (multi-pod pass "
+                         "only needs the lowering/memory proof)")
+    ap.add_argument("--tag", default=None,
+                    help="label recorded with each JSONL row (perf log)")
+    args = ap.parse_args(argv)
+    overrides = json.loads(args.override) if args.override else None
+
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        pairs.append((args.arch, args.shape))
+
+    ok = True
+    for arch, shape in pairs:
+        try:
+            rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                          cfg_overrides=overrides,
+                          microbatches=args.microbatches,
+                          cost_probe=not args.no_probe)
+            if args.tag:
+                rec["tag"] = args.tag
+        except Exception as e:  # noqa: BLE001 — report and continue
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "status": f"FAIL({type(e).__name__}: {e})"}
+            ok = False
+            print(f"[{arch} x {shape}] FAILED: {e}", file=sys.stderr)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        else:
+            print(json.dumps(rec))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape) pair — the
+shannon/kernels pattern: weak-type-correct, shardable, no device allocation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as T
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def batch_shapes(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Training/prefill batch ShapeDtypeStructs for one global batch."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.input_kind == "tokens":
+        return {"tokens": sds((B, S), I32), "labels": sds((B, S), I32)}
+    if cfg.input_kind == "frames":
+        return {"features": sds((B, S, cfg.d_model), F32),
+                "labels": sds((B, S), I32)}
+    if cfg.input_kind == "mixed":
+        n_img = min(cfg.num_image_tokens, S // 2)
+        return {"image_embeds": sds((B, n_img, cfg.d_model), F32),
+                "tokens": sds((B, S - n_img), I32),
+                "labels": sds((B, S - n_img), I32)}
+    raise ValueError(cfg.input_kind)
+
+
+def decode_shapes(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Decode-step inputs: one new token + a seq_len-capacity cache."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    return {"tokens": sds((B, 1), I32), "cache": cache,
+            "pos": sds((), I32)}
+
+
+def params_shapes(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> str | None:
+    """Returns None if the pair runs, else the skip reason (DESIGN.md §6)."""
+    if shape.kind == "decode":
+        if not cfg.causal or cfg.input_kind == "frames":
+            return "encoder-only: no autoregressive decode"
+        if shape.name == "long_500k":
+            sub_quadratic = (
+                cfg.arch_type in ("ssm", "hybrid")
+                or cfg.sliding_window > 0)
+            if not sub_quadratic:
+                return "pure full attention: no sub-quadratic variant"
+    return None

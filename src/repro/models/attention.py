@@ -1,0 +1,198 @@
+"""Attention: GQA with RoPE, flash-style chunked softmax, sliding windows,
+logit softcaps (gemma2), qk-norm (qwen3), bidirectional mode (hubert), and a
+cache-based decode path with rolling buffers for sliding-window layers."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.checkpoint import ATTN_OUT, QKV, tag
+from repro.models.common import dense_init, rms_norm, rope, softcap
+
+NEG_INF = -1e30
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    cap: float = 0.0, q_offset: int = 0,
+                    chunk: int = 512, block_skip: bool = False) -> jax.Array:
+    """Chunked online-softmax attention (pure JAX; O(S·chunk) memory).
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh), Hq % Hkv == 0.
+    ``window > 0`` restricts to a causal sliding window.
+    ``block_skip`` loops q-blocks with a statically-pruned KV range so fully
+    masked chunks are never computed (hillclimb optimization; exact same math).
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = Dh ** -0.5
+    chunk = min(chunk, Skv)
+    assert Skv % chunk == 0, (Skv, chunk)
+    n_chunks = Skv // chunk
+    qf = (q.reshape(B, Sq, Hkv, G, Dh) * scale).astype(jnp.float32)
+    kc_all = k.reshape(B, n_chunks, chunk, Hkv, Dh)
+    vc_all = v.reshape(B, n_chunks, chunk, Hkv, Dh)
+
+    def attend_range(qf_blk, q_pos, lo: int, hi: int):
+        """Online softmax over kv chunks [lo, hi) for one q block."""
+        Sb = qf_blk.shape[1]
+        m0 = jnp.full((B, Sb, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Sb, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, Sb, Hkv, G, Dh), jnp.float32)
+
+        def step(carry, j):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_index_in_dim(kc_all, j, 1, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vc_all, j, 1, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qf_blk,
+                           kc.astype(jnp.float32))
+            s = softcap(s, cap)
+            k_pos = j * chunk + jnp.arange(chunk)
+            mask = jnp.ones((Sb, chunk), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0), jnp.arange(lo, hi))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if not block_skip or not (causal or window):
+        q_pos = q_offset + jnp.arange(Sq)
+        out = attend_range(qf, q_pos, 0, n_chunks)
+    else:
+        # Static per-q-block KV ranges: skip fully masked chunks.  The block
+        # count is capped at 8 so long-sequence prefill does not unroll into
+        # huge HLO (each q block is a python-level call around an inner scan).
+        qb = min(max(chunk, Sq // 8), Sq)
+        assert Sq % qb == 0
+        outs = []
+        for i in range(Sq // qb):
+            q_lo, q_hi = q_offset + i * qb, q_offset + (i + 1) * qb
+            hi = min(n_chunks, -(-q_hi // chunk)) if causal else n_chunks
+            lo = max(0, (q_lo - window + 1) // chunk) if window else 0
+            q_pos = q_lo + jnp.arange(qb)
+            outs.append(attend_range(qf[:, i * qb:(i + 1) * qb],
+                                     q_pos, lo, max(hi, lo + 1)))
+        out = jnp.concatenate(outs, axis=1)
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     slot_pos: jax.Array, pos: jax.Array, *,
+                     window: int = 0, cap: float = 0.0) -> jax.Array:
+    """One-token attention against a (possibly rolling) cache.
+
+    q: (B, 1, Hq, Dh); caches: (B, C, Hkv, Dh); slot_pos: (C,) the absolute
+    position stored in each cache slot (-1 = empty).
+    """
+    B, _, Hq, Dh = q.shape
+    _, C, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    # Keep the cache in its storage dtype — accumulate in f32 inside the dot
+    # (a multi-GiB f32 copy of the cache would otherwise materialize).
+    qf = (q.reshape(B, Hkv, G, Dh) * Dh ** -0.5).astype(k_cache.dtype)
+    s = jnp.einsum("bhgd,bchd->bhgc", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = softcap(s, cap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window:
+        valid &= slot_pos > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgc,bchd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, Dh).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, Hkv, Dh)
+    v: jax.Array          # (B, C, Hkv, Dh)
+    slot_pos: jax.Array   # (C,) int32, absolute position per slot (-1 empty)
+
+
+def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
+                  dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        slot_pos=jnp.full((capacity,), -1, jnp.int32),
+    )
+
+
+def init_attn_params(key, cfg, d: int) -> dict:
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.num_heads * dh), 0, pd),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads * dh), 0, pd),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads * dh), 0, pd),
+        "wo": dense_init(ks[3], (cfg.num_heads * dh, d), 0, pd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), pd)
+        p["k_norm"] = jnp.zeros((dh,), pd)
+    return p
+
+
+def attention_sublayer(x: jax.Array, p: dict, cfg, *, is_local: bool,
+                       positions: jax.Array, cache: KVCache | None = None,
+                       num_heads: int | None = None):
+    """(B, S, d) -> (B, S, d).  With ``cache`` (decode), S must be 1 and
+    ``positions`` is the scalar write position; returns (out, new_cache)."""
+    B, S, _ = x.shape
+    H = num_heads if num_heads is not None else cfg.num_heads
+    Hkv = cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    window = cfg.sliding_window if is_local else 0
+    dt = x.dtype
+
+    q = tag((x @ p["wq"].astype(dt)).reshape(B, S, H, dh), QKV)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, Hkv, dh)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, Hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    pos_b = jnp.broadcast_to(positions, (B, S)) if positions.ndim <= 1 \
+        else positions
+    q = rope(q, pos_b, cfg.rope_theta)
+    k = rope(k, pos_b, cfg.rope_theta)
+
+    if cache is None:
+        if cfg.use_pallas:
+            from repro.kernels.flash_attention import flash_attention_fused
+            o = flash_attention_fused(
+                q, k, v, cfg.causal, window, cfg.attn_softcap)
+        else:
+            o = flash_attention(
+                q, k, v, causal=cfg.causal, window=window,
+                cap=cfg.attn_softcap, chunk=min(cfg.attn_chunk, S),
+                block_skip=cfg.block_causal_skip)
+        new_cache = None
+    else:
+        pos = positions.reshape(())
+        C = cache.k.shape[1]
+        slot = (pos % C).astype(jnp.int32)
+        kc = cache.k.at[:, slot].set(k[:, 0])
+        vc = cache.v.at[:, slot].set(v[:, 0])
+        sp = cache.slot_pos.at[slot].set(pos.astype(jnp.int32))
+        o = decode_attention(q, kc, vc, sp, pos, window=window,
+                             cap=cfg.attn_softcap)
+        new_cache = KVCache(kc, vc, sp)
+
+    o = tag(o.reshape(B, S, H * dh) @ p["wo"].astype(dt), ATTN_OUT)
+    return o, new_cache

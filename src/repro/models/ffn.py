@@ -1,0 +1,42 @@
+"""Dense FFN sublayers.  The SwiGLU variant applies the paper's fusion +
+checkpoint policy (save A/B, recompute SiLU) — via the Pallas fused kernel
+when ``cfg.use_pallas`` (single device), else via checkpoint-tagged XLA ops
+that the named remat policy treats identically."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.checkpoint import FFN_A, FFN_B, FFN_YSWI, tag
+from repro.models.common import dense_init
+
+
+def init_ffn_params(key, cfg, d: int, d_ff: int) -> dict:
+    ks = jax.random.split(key, 3)
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {"w1": dense_init(ks[0], (d, d_ff), 0, pd),
+         "w3": dense_init(ks[2], (d_ff, d), 0, pd)}
+    if cfg.ffn_act == "swiglu":
+        p["w2"] = dense_init(ks[1], (d, d_ff), 0, pd)
+    return p
+
+
+def ffn_sublayer(x: jax.Array, p: dict, cfg) -> jax.Array:
+    B, S, d = x.shape
+    dt = x.dtype
+    xf = x.reshape(B * S, d)
+    if cfg.ffn_act == "swiglu":
+        if cfg.use_pallas:
+            from repro.kernels.ops import swiglu as swiglu_fused
+            y = swiglu_fused(xf, p["w1"].astype(dt), p["w2"].astype(dt))
+        else:
+            a = tag(xf @ p["w1"].astype(dt), FFN_A)
+            b = tag(xf @ p["w2"].astype(dt), FFN_B)
+            y = tag(jax.nn.silu(a) * b, FFN_YSWI)
+    else:
+        a = tag(xf @ p["w1"].astype(dt), FFN_A)
+        act = {"gelu": jax.nn.gelu, "relu": jax.nn.relu,
+               "silu": jax.nn.silu}[cfg.ffn_act]
+        y = act(a)
+    return (y @ p["w3"].astype(dt)).reshape(B, S, d)

@@ -1,0 +1,206 @@
+"""MoE transformer sublayer: router + MoEBlaze expert FFN, with the
+distributed (beyond-paper) integration.
+
+Distribution (DESIGN.md §5): tokens stay sharded on the data axes; every
+expert's FFN hidden dimension ``h`` is tensor-sharded over ``model``.  Inside
+the ``shard_map`` body each device runs the *unmodified single-device
+MoEBlaze algorithm* — local gating, sort-free dispatch build, gather-GMM
+experts, gather-of-partials combine — on its local tokens and its ``h``-shard
+of every expert, followed by a single ``psum`` over ``model``.  This keeps the
+paper's dropless, never-materialized dispatch intact per device, adds exactly
+one collective per MoE layer, and needs no ragged all-to-all.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import routing
+from repro.core.baseline import moe_ffn_dense, moe_ffn_megablocks
+from repro.core.checkpoint import MOE_GATES, tag
+from repro.core.moe_layer import moe_ffn_blaze
+from repro.models.common import dense_init
+
+
+def init_moe_params(key, cfg, d: int) -> dict:
+    E, h = cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wg": dense_init(ks[0], (d, E), 0, pd),
+        "w1": dense_init(ks[1], (E, d, h), 1, pd),
+        "w3": dense_init(ks[3], (E, h, d), 1, pd),
+    }
+    if cfg.ffn_act == "swiglu":
+        p["w2"] = dense_init(ks[2], (E, d, h), 1, pd)
+    return p
+
+
+def _moe_local(xf: jax.Array, p: dict, cfg):
+    """Single-device MoEBlaze path on a (L, d) token slab."""
+    E, k = cfg.num_experts, cfg.top_k
+    g = routing.top_k_gating(xf, p["wg"].astype(xf.dtype), k)
+    if cfg.moe_impl == "proxy_gmm":
+        # COST-MODEL STAND-IN, dry-run probes only (never executed): XLA's
+        # CPU decomposition of ragged_dot is dense-per-group (E x FLOPs /
+        # temps), which misrepresents the TPU gmm lowering.  This proxy has
+        # the gmm's exact useful FLOPs (L·k rows through d->h->d) and reads
+        # the full expert weight bank once (the .sum(0) reductions), but is
+        # NOT numerically the MoE.  See EXPERIMENTS.md §Roofline.
+        disp = routing.build_dispatch(g.topk_experts, E)   # keep build cost
+        gates = g.topk_weights.astype(xf.dtype)
+        xg = jnp.take(xf, disp.expert_token_indices, axis=0)
+        w1e = p["w1"].sum(0).astype(xf.dtype)
+        w3e = p["w3"].sum(0).astype(xf.dtype)
+        a = xg @ w1e
+        if "w2" in p:
+            y_act = jax.nn.silu(a) * (xg @ p["w2"].sum(0).astype(xf.dtype))
+        else:
+            y_act = jax.nn.silu(a)
+        p_out = y_act @ w3e
+        L = xf.shape[0]
+        parts = jnp.take(p_out, disp.token_index_map.reshape(-1),
+                         axis=0).reshape(L, k, -1)
+        y = jnp.einsum("lk,lkd->ld", gates, parts)
+        aux = (cfg.aux_loss_weight *
+               routing.load_balance_loss(g.router_probs, g.topk_experts, E)
+               + cfg.z_loss_weight * routing.router_z_loss(g.logits))
+        return y, aux
+    if cfg.moe_impl == "dense":
+        y = moe_ffn_dense(xf, g.router_probs, g.topk_experts,
+                          g.topk_weights.astype(xf.dtype),
+                          p["w1"], p["w3"], p.get("w2"),
+                          activation=cfg.ffn_act)
+    else:
+        if cfg.moe_impl == "blaze_pallas":
+            from repro.kernels.dispatch import build_dispatch_pallas
+            disp = build_dispatch_pallas(g.topk_experts, E)
+        else:
+            disp = routing.build_dispatch(g.topk_experts, E)
+        gates = tag(g.topk_weights.astype(xf.dtype), MOE_GATES)
+        if cfg.moe_impl == "megablocks":
+            y = moe_ffn_megablocks(xf, gates, disp, p["w1"], p["w3"],
+                                   p.get("w2"), activation=cfg.ffn_act)
+        elif cfg.moe_impl == "blaze_pallas":
+            from repro.kernels.ops import moe_ffn_blaze_pallas
+            y = moe_ffn_blaze_pallas(xf, gates, disp, p["w1"], p["w3"],
+                                     p["w2"])
+        else:
+            y = moe_ffn_blaze(xf, gates, disp, p["w1"], p["w3"], p.get("w2"),
+                              activation=cfg.ffn_act,
+                              save_yswi=cfg.save_yswi)
+    aux = (cfg.aux_loss_weight *
+           routing.load_balance_loss(g.router_probs, g.topk_experts, E)
+           + cfg.z_loss_weight * routing.router_z_loss(g.logits))
+    return y, aux
+
+
+def _aux_of(g, cfg):
+    return (cfg.aux_loss_weight *
+            routing.load_balance_loss(g.router_probs, g.topk_experts,
+                                      cfg.num_experts)
+            + cfg.z_loss_weight * routing.router_z_loss(g.logits))
+
+
+def _moe_local_ep(xf: jax.Array, p: dict, cfg, n_model: int):
+    """Expert-parallel shard body: this device owns ``E/n_model`` experts
+    (weights arrive local via in_specs — no gather).  Each device computes
+    its experts' contributions for all local tokens; ``psum`` over 'model'
+    combines.  Implemented with the dense-dispatch formulation at the XLA
+    level; on real TPU the Pallas gather-GMM (`kernels/gather_gmm.py`) plays
+    this role with no dense waste (cost-modelled by 'proxy_gmm')."""
+    E, k = cfg.num_experts, cfg.top_k
+    E_loc = E // n_model
+    L = xf.shape[0]
+    g = routing.top_k_gating(xf, p["wg"].astype(xf.dtype), k)
+    if cfg.moe_impl == "proxy_gmm":
+        # gmm cost model under EP: ~L·k/n_model rows through one d->h->d,
+        # plus one read of the local expert bank.  NOT numerically the MoE.
+        rows = max(L * k // n_model, 1)
+        xg = jnp.take(xf, jnp.arange(rows) % L, axis=0)
+        a = xg @ p["w1"].sum(0).astype(xf.dtype)
+        y_act = jax.nn.silu(a)
+        if "w2" in p:
+            y_act = y_act * (xg @ p["w2"].sum(0).astype(xf.dtype))
+        p_out = y_act @ p["w3"].sum(0).astype(xf.dtype)
+        y = jnp.zeros_like(xf).at[jnp.arange(rows) % L].add(p_out)
+        gm = g.topk_weights.astype(xf.dtype).mean()
+        return y * gm, _aux_of(g, cfg)
+    # dense-dispatch on the local expert slice
+    idx = jax.lax.axis_index("model")
+    cw = jnp.zeros((L, E), g.topk_weights.dtype)
+    cw = cw.at[jnp.arange(L)[:, None], g.topk_experts].set(g.topk_weights)
+    cw_loc = jax.lax.dynamic_slice_in_dim(cw, idx * E_loc, E_loc, axis=1)
+    a = jnp.einsum("ld,edh->leh", xf, p["w1"].astype(xf.dtype))
+    if cfg.ffn_act == "swiglu" and "w2" in p:
+        from repro.core.moe_layer import _silu
+        y_act = _silu(a) * jnp.einsum("ld,edh->leh", xf,
+                                      p["w2"].astype(xf.dtype))
+    else:
+        from repro.core.moe_layer import _ACTS
+        y_act = _ACTS.get(cfg.ffn_act, _ACTS["silu"])[0](a)
+    p_out = jnp.einsum("leh,ehd->led", y_act, p["w3"].astype(xf.dtype))
+    y = jnp.einsum("le,led->ld", cw_loc.astype(p_out.dtype), p_out)
+    return y, _aux_of(g, cfg)
+
+
+def moe_sublayer(x: jax.Array, p: dict, cfg, *, mesh=None,
+                 dp_axes=("pod", "data")):
+    """(B, S, d) -> ((B, S, d), aux_loss).
+
+    Distribution modes (DESIGN.md §5):
+      * EP — experts sharded over 'model' when ``E % model == 0`` (weights
+        never gathered; one psum combines expert contributions);
+      * TP — otherwise the expert hidden dim is tensor-sharded over 'model'
+        and the unmodified single-device MoEBlaze algorithm runs per shard.
+    """
+    B, S, d = x.shape
+
+    if mesh is None:
+        y, aux = _moe_local(x.reshape(B * S, d), p, cfg)
+        return y.reshape(B, S, d), aux
+
+    n_model = mesh.shape.get("model", 1)
+    if cfg.moe_parallel == "ep":
+        ep = True
+    elif cfg.moe_parallel == "tp":
+        ep = False
+    else:
+        ep = (cfg.num_experts % max(n_model, 1) == 0
+              and cfg.num_experts >= n_model and n_model > 1)
+    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+    batch_axes = dp_axes if (B % max(n_dp, 1) == 0 and n_dp > 1) else ()
+    x_spec = P(batch_axes if batch_axes else None, None, None)
+    if ep:
+        p_specs = {"wg": P(None, None), "w1": P("model", None, None),
+                   "w2": P("model", None, None), "w3": P("model", None, None)}
+    else:
+        p_specs = {"wg": P(None, None), "w1": P(None, None, "model"),
+                   "w2": P(None, None, "model"), "w3": P(None, "model", None)}
+    p_specs = {k_: v for k_, v in p_specs.items() if k_ in p}
+    all_axes = tuple(mesh.axis_names)
+
+    def body(xl, pl_):
+        Bl, Sl, _ = xl.shape
+        xf = xl.reshape(Bl * Sl, d)
+        if ep:
+            y, aux = _moe_local_ep(xf, pl_, cfg, n_model)
+        else:
+            y, aux = _moe_local(xf, pl_, cfg)
+        # The one collective the MoE layer adds: combine partials.
+        y = jax.lax.psum(y, "model")
+        aux = jax.lax.pmean(aux, all_axes)
+        return y.reshape(Bl, Sl, d), aux
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, p_specs),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p)
+    return y, aux

@@ -1,0 +1,309 @@
+"""Model assembly: block patterns, layer-scan, embeddings, train/prefill/
+decode entry points, and cache management for all ten assigned architectures.
+
+Layers are stacked per *pattern group* and iterated with ``jax.lax.scan``
+(MaxText-style) so HLO size and compile time stay bounded for 46–62-layer
+configs; alternating patterns (gemma2 local/global, xLSTM mLSTM/sLSTM) scan
+over groups of ``cfg.pattern_period`` sublayers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.checkpoint import POLICIES
+from repro.models import ssm
+from repro.models.attention import (KVCache, attention_sublayer,
+                                    init_attn_params, init_kv_cache)
+from repro.models.common import dense_init, rms_norm, softcap
+from repro.models.ffn import ffn_sublayer, init_ffn_params
+from repro.models.moe_block import init_moe_params, moe_sublayer
+
+ATTN_KINDS = {"attn_ffn", "attn_local_ffn", "attn_moe", "attn_local_moe"}
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(key, kind: str, cfg) -> dict:
+    d = cfg.d_model
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    zeros = lambda: jnp.zeros((d,), pd)
+    if kind in ATTN_KINDS:
+        p = {"ln1": zeros(), "ln2": zeros(),
+             "attn": init_attn_params(ks[0], cfg, d)}
+        if cfg.post_norms:
+            p["ln1_post"] = zeros()
+            p["ln2_post"] = zeros()
+        if kind.endswith("moe"):
+            p["moe"] = init_moe_params(ks[1], cfg, d)
+        else:
+            p["ffn"] = init_ffn_params(ks[1], cfg, d, cfg.d_ff)
+        return p
+    if kind == "mlstm":
+        return {"ln1": zeros(), "mlstm": ssm.init_mlstm_params(ks[0], cfg, d)}
+    if kind == "slstm":
+        return {"ln1": zeros(), "slstm": ssm.init_slstm_params(ks[0], cfg, d)}
+    if kind == "hymba":
+        return {"ln1": zeros(), "ln2": zeros(),
+                "attn": init_attn_params(ks[0], cfg, d),
+                "mamba": ssm.init_mamba_params(ks[1], cfg, d),
+                "ffn": init_ffn_params(ks[2], cfg, d, cfg.d_ff)}
+    raise ValueError(kind)
+
+
+def init_params(key, cfg) -> dict:
+    d = cfg.d_model
+    pd = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_groups + 4)
+    pattern = cfg.block_pattern
+    assert len(pattern) == cfg.pattern_period
+
+    def init_group(k):
+        sks = jax.random.split(k, len(pattern))
+        return tuple(_init_sublayer(sk, kind, cfg)
+                     for sk, kind in zip(sks, pattern))
+
+    groups = [init_group(keys[i]) for i in range(cfg.num_groups)]
+    layers = jax.tree.map(lambda *ls: jnp.stack(ls), *groups)
+    params = {"layers": layers,
+              "final_norm": jnp.zeros((d,), pd),
+              "unembed": dense_init(keys[-1], (d, cfg.vocab_size), 0, pd)}
+    if cfg.input_kind in ("tokens", "mixed"):
+        params["embed"] = (jax.random.normal(keys[-2], (cfg.vocab_size, d))
+                           * 0.02).astype(pd)
+    if cfg.input_kind == "frames":
+        params["frontend_proj"] = dense_init(keys[-3], (d, d), 0, pd)
+    if cfg.input_kind == "mixed":
+        params["img_proj"] = dense_init(keys[-3], (d, d), 0, pd)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_sublayer(x, p, kind: str, cfg, *, mesh, positions, cache):
+    """Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ATTN_KINDS:
+        is_local = "local" in kind and cfg.sliding_window > 0
+        h = rms_norm(x, p["ln1"])
+        h, new_kv = attention_sublayer(
+            h, p["attn"], cfg, is_local=is_local, positions=positions,
+            cache=cache[0] if cache is not None else None)
+        if cfg.post_norms:
+            h = rms_norm(h, p["ln1_post"])
+        x = x + h
+        h = rms_norm(x, p["ln2"])
+        if kind.endswith("moe"):
+            h, aux = moe_sublayer(h, p["moe"], cfg, mesh=mesh)
+        else:
+            h = ffn_sublayer(h, p["ffn"], cfg)
+        if cfg.post_norms:
+            h = rms_norm(h, p["ln2_post"])
+        return x + h, aux, (new_kv,)
+    if kind == "mlstm":
+        h, st = ssm.mlstm_sublayer(
+            rms_norm(x, p["ln1"]), p["mlstm"], cfg,
+            state=cache[0] if cache is not None else None)
+        return x + h, aux, (st,)
+    if kind == "slstm":
+        h, st = ssm.slstm_sublayer(
+            rms_norm(x, p["ln1"]), p["slstm"], cfg,
+            state=cache[0] if cache is not None else None)
+        return x + h, aux, (st,)
+    if kind == "hymba":
+        h = rms_norm(x, p["ln1"])
+        ha, new_kv = attention_sublayer(
+            h, p["attn"], cfg, is_local=cfg.sliding_window > 0,
+            positions=positions, cache=cache[0] if cache is not None else None)
+        hm, st = ssm.mamba_sublayer(
+            h, p["mamba"], cfg,
+            state=cache[1] if cache is not None else None)
+        x = x + 0.5 * (ha + hm)            # parallel heads, mean-fused
+        h = ffn_sublayer(rms_norm(x, p["ln2"]), p["ffn"], cfg)
+        return x + h, aux, (new_kv, st)
+    raise ValueError(kind)
+
+
+def _apply_group(x, gp, cfg, *, mesh, positions, cache_group):
+    auxes = []
+    new_caches = []
+    for j, kind in enumerate(cfg.block_pattern):
+        c = cache_group[j] if cache_group is not None else None
+        x, aux, nc = _apply_sublayer(x, gp[j], kind, cfg, mesh=mesh,
+                                     positions=positions, cache=c)
+        auxes.append(aux)
+        new_caches.append(nc)
+    return x, sum(auxes), tuple(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.input_kind == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    elif cfg.input_kind == "frames":
+        x = (batch["features"].astype(dt) @
+             params["frontend_proj"].astype(dt))
+    elif cfg.input_kind == "mixed":
+        img = (batch["image_embeds"].astype(dt) @
+               params["img_proj"].astype(dt))
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+        x = jnp.concatenate([img, tok], axis=1)
+    else:
+        raise ValueError(cfg.input_kind)
+    return x * (cfg.d_model ** 0.5)
+
+
+def _act_constraint(x, mesh):
+    """Anchor activations batch-sharded on the data axes — without this GSPMD
+    can propagate the FSDP weight shardings into batch-replicated activations
+    (observed: 16x activation blow-up on prefill)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    if n_dp <= 1 or x.shape[0] % n_dp:
+        return x
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def forward(params, batch, cfg, *, mesh=None, last_only: bool = False):
+    """Full-sequence forward (training / prefill).  Returns (logits, aux).
+    ``last_only`` emits logits for the final position only (prefill)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    x = _act_constraint(x, mesh)
+
+    def group_fn(carry, gp):
+        x, aux = carry
+        x, a, _ = _apply_group(x, gp, cfg, mesh=mesh, positions=positions,
+                               cache_group=None)
+        return (_act_constraint(x, mesh), aux + a), None
+
+    if cfg.remat_policy != "full":
+        group_fn = jax.checkpoint(
+            group_fn, policy=POLICIES[cfg.remat_policy], prevent_cse=False)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(group_fn, (x, aux0), params["layers"])
+    else:
+        aux = aux0
+        for i in range(cfg.num_groups):
+            gp = jax.tree.map(lambda l: l[i], params["layers"])
+            (x, aux), _ = group_fn((x, aux), gp)
+
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["unembed"].astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, aux
+
+
+def init_cache(cfg, batch: int, capacity: int):
+    """Decode cache pytree, stacked over layer groups."""
+    dt = jnp.dtype(cfg.dtype)
+    dh = cfg.resolved_head_dim
+
+    def sub_cache(kind):
+        if kind in ATTN_KINDS:
+            cap = capacity
+            if "local" in kind and cfg.sliding_window:
+                cap = min(cfg.sliding_window, capacity)
+            return (init_kv_cache(batch, cap, cfg.num_kv_heads, dh, dt),)
+        if kind == "mlstm":
+            H = cfg.num_heads
+            dhh = 2 * cfg.d_model // H
+            return ((jnp.zeros((batch, H, dhh, dhh), jnp.float32),
+                     jnp.zeros((batch, H, dhh), jnp.float32),
+                     jnp.full((batch, H), -1e30, jnp.float32)),)
+        if kind == "slstm":
+            d = cfg.d_model
+            return ((jnp.zeros((batch, d), jnp.float32),
+                     jnp.zeros((batch, d), jnp.float32),
+                     jnp.full((batch, d), -1e30, jnp.float32)),)
+        if kind == "hymba":
+            cap = min(cfg.sliding_window, capacity) if cfg.sliding_window \
+                else capacity
+            return (init_kv_cache(batch, cap, cfg.num_kv_heads, dh, dt),
+                    jnp.zeros((batch, cfg.ssm_heads, dh, cfg.ssm_state),
+                              jnp.float32))
+        raise ValueError(kind)
+
+    one_group = tuple(sub_cache(k) for k in cfg.block_pattern)
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.num_groups,) + l.shape),
+        one_group)
+
+
+def decode_step(params, cache, batch, pos, cfg, *, mesh=None):
+    """One-token decode.  batch['tokens']: (B, 1); pos: scalar absolute
+    position.  Returns (logits (B, vocab), new_cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.input_kind == "frames":
+        raise ValueError("encoder-only architectures do not decode")
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    x = x * (cfg.d_model ** 0.5)
+    positions = jnp.full((1,), pos)
+
+    def group_fn(x, scan_in):
+        gp, cache_group = scan_in
+        x, _, nc = _apply_group(x, gp, cfg, mesh=mesh, positions=positions,
+                                cache_group=cache_group)
+        return x, nc
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(group_fn, x, (params["layers"], cache))
+    else:
+        ncs = []
+        for i in range(cfg.num_groups):
+            gp = jax.tree.map(lambda l: l[i], params["layers"])
+            cg = jax.tree.map(lambda l: l[i], cache)
+            x, nc = group_fn(x, (gp, cg))
+            ncs.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *ncs)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = x[:, 0] @ params["unembed"].astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params, batch, cfg, *, mesh=None):
+    logits, aux = forward(params, batch, cfg, mesh=mesh)
+    labels = batch["labels"]
+    if cfg.input_kind == "mixed":
+        # image positions carry no next-token loss
+        n_img = batch["image_embeds"].shape[1]
+        logits = logits[:, n_img:]
+    if cfg.causal:
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux, {"ce": loss, "aux": aux}

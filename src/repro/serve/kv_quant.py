@@ -1,0 +1,106 @@
+"""Int8 KV-cache quantization (beyond-paper serving optimization).
+
+The paper's memory wall for training is activation buffers; for *decode* the
+wall is the KV cache (e.g. deepseek-33b x decode_32k: 4.2 GiB/device — the
+largest single input of any pair in the dry-run).  Symmetric per-(position,
+head) int8 quantization cuts it ~2x vs bf16 with <1e-2 relative attention
+error (tested), at the cost of one rescale per read — decode attention is
+bandwidth-bound, so halving cache bytes is worth far more than the extra
+multiply.
+
+Layout: values int8 (B, C, H, D) + scales f16 (B, C, H, 1); the scale is the
+per-vector absmax / 127.  Quantization happens once at append time; the
+dequantized tile is transient in the attention einsum.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedKVCache(NamedTuple):
+    k_q: jax.Array        # int8 (B, C, Hkv, Dh)
+    k_scale: jax.Array    # f16  (B, C, Hkv, 1)
+    v_q: jax.Array        # int8 (B, C, Hkv, Dh)
+    v_scale: jax.Array    # f16  (B, C, Hkv, 1)
+    slot_pos: jax.Array   # int32 (C,)
+
+
+def quantize(x: jax.Array):
+    """Symmetric int8 over the last axis.  x: (..., D)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float16)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+def init_quant_cache(batch: int, capacity: int, n_kv: int,
+                     head_dim: int) -> QuantizedKVCache:
+    return QuantizedKVCache(
+        k_q=jnp.zeros((batch, capacity, n_kv, head_dim), jnp.int8),
+        k_scale=jnp.zeros((batch, capacity, n_kv, 1), jnp.float16),
+        v_q=jnp.zeros((batch, capacity, n_kv, head_dim), jnp.int8),
+        v_scale=jnp.zeros((batch, capacity, n_kv, 1), jnp.float16),
+        slot_pos=jnp.full((capacity,), -1, jnp.int32),
+    )
+
+
+def append(cache: QuantizedKVCache, k: jax.Array, v: jax.Array,
+           pos: jax.Array) -> QuantizedKVCache:
+    """Append one token's k/v (B, Hkv, Dh) at absolute position ``pos``
+    (rolling over capacity)."""
+    C = cache.k_q.shape[1]
+    slot = (pos % C).astype(jnp.int32)
+    kq, ks = quantize(k)
+    vq, vs = quantize(v)
+    return QuantizedKVCache(
+        k_q=cache.k_q.at[:, slot].set(kq),
+        k_scale=cache.k_scale.at[:, slot].set(ks),
+        v_q=cache.v_q.at[:, slot].set(vq),
+        v_scale=cache.v_scale.at[:, slot].set(vs),
+        slot_pos=cache.slot_pos.at[slot].set(pos.astype(jnp.int32)),
+    )
+
+
+def decode_attention_quant(q: jax.Array, cache: QuantizedKVCache,
+                           pos: jax.Array, *, window: int = 0,
+                           cap: float = 0.0) -> jax.Array:
+    """One-token attention against the int8 cache.
+
+    q: (B, 1, Hq, Dh).  Scores are computed as (q·k_q)·k_scale — the int8
+    matmul accumulates in f32 and the per-vector scale is applied to the
+    score, so no dequantized (B, C, H, D) f32 copy of the cache is ever
+    materialized.
+    """
+    B, _, Hq, Dh = q.shape
+    _, C, Hkv, _ = cache.k_q.shape
+    G = Hq // Hkv
+    qf = (q.reshape(B, Hkv, G, Dh) * Dh ** -0.5).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bchd->bhgc", qf,
+                   cache.k_q.astype(jnp.float32))
+    s = s * cache.k_scale[..., 0].astype(jnp.float32).transpose(0, 2, 1)[
+        :, :, None, :]
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    valid = (cache.slot_pos >= 0) & (cache.slot_pos <= pos)
+    if window:
+        valid &= cache.slot_pos > pos - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    pv = p * cache.v_scale[..., 0].astype(jnp.float32).transpose(0, 2, 1)[
+        :, :, None, :]
+    out = jnp.einsum("bhgc,bchd->bhgd", pv,
+                     cache.v_q.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, Dh).astype(q.dtype)
+
+
+def cache_bytes(cache) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(cache))

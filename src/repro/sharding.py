@@ -1,0 +1,155 @@
+"""Logical-axis sharding rules -> PartitionSpecs, divisibility-aware.
+
+Strategy (DESIGN.md §5):
+  * params: FSDP x TP — input-side matrices P('data', 'model'), output-side
+    (projections back to d_model) P('model', 'data'); MoE expert tensors keep
+    the expert dim replicated and tensor-shard the hidden dim on 'model'
+    (matching the shard_map specs in models/moe_block.py).
+  * every rule checks divisibility and falls back to replication for that dim
+    (never uneven padding) — e.g. hubert's vocab=504 vs a 16-way axis.
+  * activations/batches: batch on ('pod','data'); decode caches shard batch
+    on data axes and capacity/state dims on 'model' (sequence/context
+    parallelism for long_500k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# names of leaves that project back down to d_model (row-parallel / "out")
+_OUT_PROJ = {"wo", "w3", "w_down", "w_out"}
+# MoE expert tensors (leading expert dim)
+_MOE_IN = {"w1", "w2"}          # (E, d, h)
+_MOE_OUT = {"w3"}               # (E, h, d)
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fit(dim: int, mesh, axis) -> str | tuple | None:
+    """Return ``axis`` if ``dim`` divides evenly over it, else None."""
+    if axis is None:
+        return None
+    sizes = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        if a not in mesh.axis_names:
+            return None
+        sizes *= mesh.shape[a]
+    return axis if sizes > 1 and dim % sizes == 0 else None
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _leaf_spec(path_keys: list[str], shape: tuple, mesh,
+               moe_parallel: str = "auto") -> P:
+    name = path_keys[-1]
+    stacked = path_keys[0] == "layers"
+    dims = shape[1:] if stacked else shape
+    prefix = (None,) if stacked else ()
+
+    def two_d(in_dim, out_dim, in_ax, out_ax):
+        return prefix + (_fit(in_dim, mesh, in_ax), _fit(out_dim, mesh, out_ax))
+
+    if len(dims) == 3 and name in (_MOE_IN | _MOE_OUT):
+        # Expert-parallel when the expert count divides the model axis
+        # (qwen3-moe: 8 experts/device, no weight gather in the MoE body);
+        # tensor-parallel on the expert hidden dim otherwise (mixtral).
+        ep = _fit(dims[0], mesh, "model") if moe_parallel == "auto" \
+            else (moe_parallel == "ep")
+        if ep:
+            return prefix + ("model", _fit(dims[1], mesh, "data"), None)
+        if name in _MOE_IN:                          # (E, d, h)
+            return prefix + (None, _fit(dims[1], mesh, "data"),
+                             _fit(dims[2], mesh, "model"))
+        return prefix + (None, _fit(dims[1], mesh, "model"),  # (E, h, d)
+                         _fit(dims[2], mesh, "data"))
+    if len(dims) == 2:
+        if name == "embed":                          # (V, d)
+            return two_d(dims[0], dims[1], "model", "data")
+        if name in _OUT_PROJ:                        # (f, d)
+            return two_d(dims[0], dims[1], "model", "data")
+        return two_d(dims[0], dims[1], "data", "model")  # (d, f) in-proj
+    return prefix + (None,) * len(dims)
+
+
+def param_specs(params_shapes, mesh, *, fsdp: bool = True,
+                moe_parallel: str = "auto"):
+    """PartitionSpec tree congruent with the params tree (of shapes or
+    arrays).  ``fsdp=False`` drops the 'data' axis from every param spec —
+    weights replicated across data replicas (the right choice for decode,
+    where ZeRO-style gathers would run once per layer per token)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        keys = [str(k) for k in keys if k is not None]
+        axes = _leaf_spec(keys, tuple(leaf.shape), mesh, moe_parallel)
+        if not fsdp:
+            axes = tuple(
+                None if ax == "data" or
+                (isinstance(ax, tuple) and "data" in ax) else ax
+                for ax in axes)
+        specs.append(P(*axes))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(pspecs):
+    """AdamW state specs: step replicated, moments mirror params."""
+    from repro.train.optimizer import AdamWState
+    return AdamWState(step=P(), mu=pspecs, nu=jax.tree.map(lambda s: s,
+                                                           pspecs))
+
+
+def batch_specs(cfg, batch_shapes: dict, mesh) -> dict:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_shapes.items():
+        b = v.shape[0]
+        bax = _fit(b, mesh, dp) or _fit(b, mesh, ("data",))
+        out[k] = P(*((bax,) + (None,) * (len(v.shape) - 1)))
+    return out
+
+
+def cache_specs(cfg, cache_shapes, mesh):
+    """Decode-cache specs: (groups, B, capacity/state...) leaves.
+    Batch -> data axes when divisible; the largest remaining dim (KV capacity
+    or SSM state dim) -> 'model' (plus 'data' for context-parallel long
+    caches when batch could not be sharded)."""
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        ndim = len(shape)
+        if ndim == 0:
+            return P()
+        if ndim == 1:            # slot_pos (C,) — replicate
+            return P(None)
+        axes = [None] * ndim     # axes[0] = groups dim
+        b_ax = _fit(shape[1], mesh, dp) or _fit(shape[1], mesh, ("data",))
+        axes[1] = b_ax
+        if ndim >= 3:
+            # shard the biggest remaining dim; prefer model, add data axes
+            # for context parallelism when batch is unsharded
+            big = max(range(2, ndim), key=lambda i: shape[i])
+            if b_ax is None:
+                cand = _fit(shape[big], mesh, ("data", "model")) \
+                    or _fit(shape[big], mesh, ("model",)) \
+                    or _fit(shape[big], mesh, ("data",))
+            else:
+                cand = _fit(shape[big], mesh, ("model",))
+            axes[big] = cand
+        return P(*axes)
+
+    return jax.tree.map(spec, cache_shapes)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,56 @@
+"""Pytree checkpointing to sharded ``.npz`` files (no orbax in this
+environment).  Keys are flattened tree paths; restore validates structure and
+shapes against a template tree."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}, treedef
+
+
+def save_checkpoint(path: str, step: int, params, opt_state=None):
+    os.makedirs(path, exist_ok=True)
+    blobs = {"params": params}
+    if opt_state is not None:
+        blobs["opt"] = opt_state
+    manifest = {"step": int(step), "files": []}
+    for name, tree in blobs.items():
+        flat, _ = _flatten(tree)
+        fn = os.path.join(path, f"{name}.npz")
+        np.savez(fn, **{k: np.asarray(v) for k, v in flat.items()})
+        manifest["files"].append(f"{name}.npz")
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore_checkpoint(path: str, params_template, opt_template=None):
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def restore_tree(name, template):
+        data = np.load(os.path.join(path, f"{name}.npz"))
+        flat, treedef = _flatten(template)
+        leaves = []
+        for key, tmpl in flat.items():
+            arr = data[key]
+            if arr.shape != tuple(tmpl.shape):
+                raise ValueError(
+                    f"checkpoint shape mismatch at {key}: "
+                    f"{arr.shape} vs {tuple(tmpl.shape)}")
+            leaves.append(arr.astype(tmpl.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves)
+
+    params = restore_tree("params", params_template)
+    out = [manifest["step"], params]
+    if opt_template is not None:
+        out.append(restore_tree("opt", opt_template))
+    return tuple(out)

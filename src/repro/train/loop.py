@@ -1,0 +1,94 @@
+"""Training loop: jitted train step (loss -> grads -> clip -> AdamW),
+metrics, periodic checkpointing.  Works single-device (examples, smoke) and
+under a mesh (launch/train.py passes shardings)."""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import make_batch_iterator
+from repro.models import transformer as T
+from repro.train import checkpointing
+from repro.train.optimizer import (AdamWState, adamw_update,
+                                   clip_by_global_norm, cosine_schedule,
+                                   init_adamw)
+
+
+def make_train_step(cfg, tcfg, *, mesh=None):
+    """Returns ``step_fn(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    With ``tcfg.num_microbatches > 1`` the global batch is split along its
+    leading axis and gradients are accumulated in f32 across a ``lax.scan``
+    (gradient accumulation — bounds activation memory to one microbatch)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: T.train_loss(p, batch, cfg, mesh=mesh),
+            has_aux=True)(params)
+
+    def accumulate(params, batch):
+        M = tcfg.num_microbatches
+        if M <= 1:
+            return grads_of(params, batch)
+        mb = jax.tree.map(
+            lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch)
+
+        def body(acc, one):
+            (loss, metrics), g = grads_of(params, one)
+            acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / M, acc, g)
+            return acc, (loss, metrics)
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, (losses, mets) = jax.lax.scan(body, zero, mb)
+        return (losses.mean(),
+                jax.tree.map(lambda m: m.mean(), mets)), grads
+
+    def step_fn(params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = accumulate(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = cosine_schedule(opt_state.step, peak_lr=tcfg.learning_rate,
+                             warmup=tcfg.warmup_steps, total=tcfg.total_steps)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            eps=tcfg.eps, weight_decay=tcfg.weight_decay)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return step_fn
+
+
+def train(cfg, tcfg, *, mesh=None, params=None, log=print,
+          batch_iterator=None):
+    """End-to-end training driver.  Returns (params, opt_state, history)."""
+    key = jax.random.PRNGKey(tcfg.seed)
+    if params is None:
+        params = T.init_params(key, cfg)
+    opt_state = init_adamw(params)
+    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh=mesh), donate_argnums=(0, 1))
+    if batch_iterator is None:
+        batch_iterator = make_batch_iterator(
+            cfg.vocab_size, tcfg.seq_len, tcfg.batch_size, tcfg.seed)
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(tcfg.total_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batch_iterator).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            log(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "
+                f"({m['wall_s']:.1f}s)")
+        if tcfg.checkpoint_every and step and step % tcfg.checkpoint_every == 0:
+            checkpointing.save_checkpoint(
+                f"{tcfg.checkpoint_dir}/step_{step}", step, params, opt_state)
+    return params, opt_state, history

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests must see 1 device by default (the dry-run sets its own flags in a
+# separate process).  A handful of sharding tests ask for 8 host devices via
+# the submodule below, so set it once here before jax initializes — 8 devices
+# is small enough that single-device tests are unaffected semantically.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,62 @@
+"""Int8 KV-cache quantization tests (beyond-paper serving optimization)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import KVCache, decode_attention, init_kv_cache
+from repro.serve import kv_quant as KQ
+
+
+def test_quant_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64)) * 3
+    q, s = KQ.quantize(x)
+    x2 = KQ.dequantize(q, s)
+    rel = np.abs(np.asarray(x2 - x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < 1e-2, rel
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float16
+
+
+@pytest.mark.parametrize("window", [0, 16])
+def test_quant_decode_matches_fp(window):
+    """Attention against the int8 cache tracks the fp cache closely."""
+    B, C, Hq, Hkv, Dh, S = 2, 32, 4, 2, 16, 24
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, Dh))
+    kv_k = jax.random.normal(ks[1], (B, S, Hkv, Dh))
+    kv_v = jax.random.normal(ks[2], (B, S, Hkv, Dh))
+
+    fp = init_kv_cache(B, C, Hkv, Dh, jnp.float32)
+    qc = KQ.init_quant_cache(B, C, Hkv, Dh)
+    for t in range(S):
+        fp = KVCache(fp.k.at[:, t].set(kv_k[:, t]),
+                     fp.v.at[:, t].set(kv_v[:, t]),
+                     fp.slot_pos.at[t].set(t))
+        qc = KQ.append(qc, kv_k[:, t], kv_v[:, t], jnp.array(t))
+    pos = jnp.array(S - 1)
+    ref = decode_attention(q, fp.k, fp.v, fp.slot_pos, pos, window=window)
+    out = KQ.decode_attention_quant(q, qc, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_quant_cache_halves_bytes():
+    B, C, Hkv, Dh = 2, 128, 4, 64
+    fp = init_kv_cache(B, C, Hkv, Dh, jnp.bfloat16)
+    qc = KQ.init_quant_cache(B, C, Hkv, Dh)
+    fp_b = KQ.cache_bytes(fp)
+    qc_b = KQ.cache_bytes(qc)
+    # int8 + f16 scales ≈ (1 + 2/Dh) bytes/elt vs 2 bytes/elt for bf16
+    assert qc_b < 0.55 * fp_b, (qc_b, fp_b)
+
+
+def test_rolling_quant_cache():
+    """Rolling (windowed) quantized cache keeps only the last W positions."""
+    B, W, Hkv, Dh = 1, 8, 1, 8
+    qc = KQ.init_quant_cache(B, W, Hkv, Dh)
+    for t in range(20):
+        k = jnp.full((B, Hkv, Dh), float(t))
+        qc = KQ.append(qc, k, k, jnp.array(t))
+    pos = np.asarray(qc.slot_pos)
+    assert sorted(pos.tolist()) == list(range(12, 20))

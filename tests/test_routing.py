@@ -1,0 +1,93 @@
+"""Routing / dispatch-structure invariants, incl. hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.routing import (build_dispatch, build_dispatch_sort,
+                                load_balance_loss, top_k_gating)
+
+
+def _random_topk(seed, L, E, k):
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (L, E))
+    _, topk = jax.lax.top_k(scores, k)
+    return topk.astype(jnp.int32)
+
+
+def test_paper_figure2_example():
+    """The worked example from paper §4.1 / Figure 2."""
+    topk = jnp.array([[2, 3], [0, 1], [0, 3], [1, 2], [0, 3]], jnp.int32)
+    d = build_dispatch(topk, 4)
+    np.testing.assert_array_equal(
+        d.expert_token_indices, [1, 2, 4, 1, 3, 0, 3, 0, 2, 4])
+    np.testing.assert_array_equal(d.expert_token_offsets, [0, 3, 5, 7, 10])
+    np.testing.assert_array_equal(
+        d.token_expert_indices, [2, 3, 0, 1, 0, 3, 1, 2, 0, 3])
+    np.testing.assert_array_equal(d.token_index_map[0], [5, 7])
+
+
+@pytest.mark.parametrize("L,E,k", [(16, 4, 1), (64, 8, 2), (128, 16, 4),
+                                   (33, 5, 3), (256, 128, 8)])
+def test_sortfree_equals_sort(L, E, k):
+    topk = _random_topk(L + E + k, L, E, k)
+    a = build_dispatch(topk, E)
+    b = build_dispatch_sort(topk, E)
+    for name, (u, v) in zip(a._fields, zip(a, b)):
+        np.testing.assert_array_equal(u, v, err_msg=name)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 60), st.integers(2, 16), st.integers(1, 4),
+       st.integers(0, 2**31 - 1))
+def test_dispatch_invariants(L, E, k, seed):
+    """Property: the structures are a consistent permutation — dropless."""
+    k = min(k, E)
+    topk = _random_topk(seed, L, E, k)
+    d = build_dispatch(topk, E)
+    eti = np.asarray(d.expert_token_indices)
+    off = np.asarray(d.expert_token_offsets)
+    tim = np.asarray(d.token_index_map)
+    lens = np.asarray(d.expert_lengths)
+    # 1. offsets are exclusive prefix sums of lengths; total slots = L*k
+    assert off[0] == 0 and off[-1] == L * k
+    np.testing.assert_array_equal(np.diff(off), lens)
+    # 2. token_index_map is a permutation of [0, L*k)
+    assert sorted(tim.reshape(-1).tolist()) == list(range(L * k))
+    # 3. inverse relation: eti[tim[l, i]] == l  (every slot finds its token)
+    for l in range(L):
+        for i in range(k):
+            assert eti[tim[l, i]] == l
+    # 4. expert segments contain exactly the tokens that chose that expert
+    tk = np.asarray(topk)
+    for e in range(E):
+        seg = eti[off[e]:off[e + 1]]
+        chose = sorted(np.where((tk == e).any(axis=1))[0].tolist())
+        assert sorted(seg.tolist()) == chose
+        # within-expert ordering is by token id (paper Fig. 2)
+        assert list(seg) == sorted(seg)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_gating_topk_unique_and_normalized(E, k, seed):
+    k = min(k, E)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 16))
+    wg = jax.random.normal(jax.random.PRNGKey(seed + 1), (16, E))
+    g = top_k_gating(x, wg, k)
+    ids = np.asarray(g.topk_experts)
+    assert ((0 <= ids) & (ids < E)).all()
+    for row in ids:
+        assert len(set(row.tolist())) == k          # unique experts per token
+    np.testing.assert_allclose(np.asarray(g.topk_weights).sum(-1), 1.0,
+                               rtol=1e-5)
+
+
+def test_load_balance_loss_uniform_is_one():
+    """Perfectly uniform routing gives loss == 1 (Switch normalization)."""
+    L, E, k = 128, 8, 1
+    probs = jnp.full((L, E), 1.0 / E)
+    topk = (jnp.arange(L) % E).reshape(L, 1).astype(jnp.int32)
+    lb = load_balance_loss(probs, topk, E)
+    assert abs(float(lb) - 1.0) < 1e-5

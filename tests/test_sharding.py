@@ -1,0 +1,121 @@
+"""Distribution tests on an 8-host-device mesh (set in conftest): sharded
+train steps match single-device numerics, specs respect divisibility, and the
+MoE shard_map path equals the unsharded layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs import get_config
+from repro.configs.base import InputShape, TrainConfig
+from repro.launch import specs as S
+from repro.launch.mesh import make_debug_mesh
+from repro.models import transformer as T
+from repro.models.moe_block import moe_sublayer
+from repro.train.loop import make_train_step
+from repro.train.optimizer import init_adamw
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 host devices")
+
+MOE_CFG = get_config("mixtral_8x7b").reduced().replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    num_experts=4, top_k=2, moe_d_ff=64, vocab_size=128, sliding_window=16,
+    attn_chunk=16)
+
+
+def test_param_specs_divisibility():
+    mesh = make_debug_mesh(2, 4)
+    cfg = get_config("hymba_1_5b")          # 25 heads, awkward dims
+    pspecs = shd.param_specs(S.params_shapes(cfg), mesh)
+    pshapes = S.params_shapes(cfg)
+    for spec, shape in zip(jax.tree.leaves(
+            pspecs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.leaves(pshapes)):
+        for dim, ax in zip(shape.shape, spec):
+            if ax is None:
+                continue
+            n = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                n *= mesh.shape[a]
+            assert dim % n == 0, (shape.shape, spec)
+
+
+def test_moe_shard_map_matches_single_device():
+    mesh = make_debug_mesh(2, 4)
+    cfg = MOE_CFG
+    key = jax.random.PRNGKey(0)
+    from repro.models.moe_block import init_moe_params
+    p = init_moe_params(key, cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    y_ref, aux_ref = moe_sublayer(x, p, cfg, mesh=None)
+    with mesh:
+        y_sh, aux_sh = jax.jit(
+            lambda x, p: moe_sublayer(x, p, cfg, mesh=mesh,
+                                      dp_axes=("data",)))(x, p)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_sh),
+                               atol=2e-5)
+    # the load-balance aux is computed per data shard and averaged — a local
+    # estimator (standard practice), not bit-equal to the global statistic
+    np.testing.assert_allclose(float(aux_ref), float(aux_sh), rtol=0.05)
+
+
+def test_sharded_train_step_matches_single_device():
+    mesh = make_debug_mesh(2, 4)
+    cfg = MOE_CFG
+    tcfg = TrainConfig(num_microbatches=2, learning_rate=1e-3)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_adamw(params)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    p1, _, m1 = jax.jit(make_train_step(cfg, tcfg, mesh=None))(
+        params, opt, batch)
+
+    pspecs = shd.param_specs(params, mesh)
+    shardings = shd.to_shardings(
+        mesh, (pspecs, shd.opt_specs(pspecs),
+               shd.batch_specs(cfg, batch, mesh)))
+    with mesh:
+        p2, _, m2 = jax.jit(make_train_step(cfg, tcfg, mesh=mesh),
+                            in_shardings=shardings)(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-4)
+
+
+def test_decode_cache_specs_long_context():
+    """long_500k-style cache: batch=1 unshardable -> sequence axis sharded."""
+    mesh = make_debug_mesh(2, 4)
+    cfg = MOE_CFG.replace(sliding_window=0)
+    cache_shapes = jax.eval_shape(lambda: T.init_cache(cfg, 1, 1024))
+    cspecs = shd.cache_specs(cfg, cache_shapes, mesh)
+    kv_spec = jax.tree.leaves(
+        cspecs, is_leaf=lambda x: isinstance(x, P))[0]
+    flat = [ax for ax in kv_spec if ax]
+    assert flat, "expected some sharded axis on the KV cache"
+
+
+def test_dryrun_small_mesh_end_to_end():
+    """The dryrun builder lowers + compiles on a small mesh (fast proxy for
+    the 512-device run)."""
+    from repro.launch.dryrun import build_lowerable
+    mesh = make_debug_mesh(2, 4)
+    shape = InputShape("tiny_train", 64, 8, "train")
+    built, skip, cfg = build_lowerable(
+        "mixtral_8x7b", "tiny_train", mesh,
+        dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+             head_dim=16, num_experts=4, top_k=2, moe_d_ff=64,
+             vocab_size=128, sliding_window=16, attn_chunk=16),
+        shape=shape, microbatches=2)
+    assert skip is None
+    fn, args, shardings = built
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+    assert compiled.memory_analysis().temp_size_in_bytes > 0
