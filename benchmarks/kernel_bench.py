@@ -1,6 +1,7 @@
 """Kernel-level benchmarks: fused vs unfused SwiGLU (HLO bytes/ops from
-cost analysis — the memory-traffic claim of paper §5.2) and gather-GMM vs
-materialized gather+GMM."""
+cost analysis — the memory-traffic claim of paper §5.2), gather-GMM vs
+materialized gather+GMM, and the grouped-GEMM backend axis (every available
+``repro.core.gmm_backend`` backend on the same routed workload)."""
 
 from __future__ import annotations
 
@@ -63,10 +64,53 @@ def pallas_kernel_time(L=1024, d=256, h=512, iters=3):
     return [("pallas_fused_swiglu_interpret", us, f"L={L},d={d},h={h}")]
 
 
+def gmm_backend_bench(S=2048, d=256, h=512, E=8, iters=3, *,
+                      include_pallas=False):
+    """Compare every available grouped-GEMM backend on one routed workload:
+    wall time (fwd + dw) and the jitted forward's HLO flops/bytes.
+
+    ``pallas`` runs in interpret mode on CPU — wall time there measures the
+    interpreter, not the kernel, so it is opt-in.
+    """
+    from repro.core import gmm_backend as GB
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    lhs = jax.random.normal(ks[0], (S, d), jnp.float32)
+    rhs = jax.random.normal(ks[1], (E, d, h), jnp.float32) * 0.05
+    dout = jax.random.normal(ks[2], (S, h), jnp.float32)
+    base = S // E
+    gs = jnp.asarray([base] * (E - 1) + [S - base * (E - 1)], jnp.int32)
+
+    rows = []
+    for name in GB.available_backends():
+        if name == "pallas" and not include_pallas:
+            continue
+
+        def fwd(lhs, rhs, gs, _name=name):
+            return GB.gmm(lhs, rhs, gs, backend=_name)
+
+        def dw(lhs, dout, gs, _name=name):
+            return GB.gmm_dw(lhs, dout, gs, backend=_name)
+
+        fl, by = _cost(fwd, lhs, rhs, gs)
+        jf, jd = jax.jit(fwd), jax.jit(dw)
+        jax.block_until_ready((jf(lhs, rhs, gs), jd(lhs, dout, gs)))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = (jf(lhs, rhs, gs), jd(lhs, dout, gs))
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append((f"gmm_backend_{name}", us,
+                     f"S={S},d={d},h={h},E={E};flops={fl:.3e};bytes={by:.3e}"))
+    return rows
+
+
 def run(print_fn=print, *, quick: bool = False):
     rows = []
     rows += swiglu_traffic(L=1024 if quick else 4096)
     rows += pallas_kernel_time(L=256 if quick else 1024)
+    rows += gmm_backend_bench(S=512 if quick else 2048,
+                              include_pallas=quick)
     for r in rows:
         print_fn(f"{r[0]}: {r[1]:.1f}us {r[2]}")
     return rows

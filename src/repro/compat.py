@@ -1,0 +1,40 @@
+"""Version-compat shims over JAX APIs that moved between the pinned floor
+(0.4.37) and current JAX.
+
+The repo must run on both ends of the CI matrix (see
+``.github/workflows/ci.yml``), so every usage of an API that was renamed or
+grew new arguments funnels through here — the same pattern as the grouped-
+GEMM backend registry (``repro.core.gmm_backend``), just thin enough that a
+plain function per symbol suffices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where supported.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist on newer JAX;
+    Auto is the implicit behaviour of the older API, so omitting the kwarg
+    there is semantically identical.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (0.4.x).
+
+    ``check`` maps to ``check_vma`` on new JAX and ``check_rep`` on old —
+    the same replication/varying-manual-axes validation under both names.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check)

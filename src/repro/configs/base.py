@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)
@@ -29,6 +29,8 @@ class ModelConfig:
     moe_d_ff: int = 0                    # per-expert hidden dim
     moe_impl: str = "blaze"              # blaze | blaze_pallas | megablocks | dense
     moe_parallel: str = "auto"           # auto | ep | tp (distributed mode)
+    gmm_backend: str = "auto"            # grouped-GEMM backend: auto | ragged
+    # | segment | pallas (see repro.core.gmm_backend; env REPRO_GMM_BACKEND)
     save_yswi: bool = True               # paper-faithful Algorithm 1 residuals
     aux_loss_weight: float = 0.01
     z_loss_weight: float = 1e-3

@@ -17,27 +17,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.moe_layer import _ACTS, _silu, gmm
+from repro.core.gmm_backend import gmm
+from repro.core.moe_layer import _ACTS, _silu
 from repro.core.routing import Dispatch
 
 
 def moe_ffn_megablocks(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
                        w1: jax.Array, w3: jax.Array,
                        w2: jax.Array | None = None,
-                       *, activation: str = "swiglu") -> jax.Array:
+                       *, activation: str = "swiglu",
+                       backend: str | None = None) -> jax.Array:
     """Materialized-dispatch baseline (plain autodiff, no smart checkpoint)."""
     L, k = dispatch.token_index_map.shape
     # Materialize the routed-token buffer — the (L*k, d) allocation the paper
     # eliminates (§2.1 example: ~94 GB at DeepSeek scale).
     xg = jnp.take(x, dispatch.expert_token_indices, axis=0)
-    a = gmm(xg, w1, dispatch.expert_lengths)
+    a = gmm(xg, w1, dispatch.expert_lengths, backend=backend)
     if activation == "swiglu":
         assert w2 is not None
-        b = gmm(xg, w2, dispatch.expert_lengths)
+        b = gmm(xg, w2, dispatch.expert_lengths, backend=backend)
         y_act = _silu(a) * b
     else:
         y_act = _ACTS[activation][0](a)
-    p_out = gmm(y_act, w3, dispatch.expert_lengths)          # (L*k, d)
+    p_out = gmm(y_act, w3, dispatch.expert_lengths, backend=backend)
     g_slot = jnp.zeros((L * k,), gates.dtype).at[
         dispatch.token_index_map.reshape(-1)].set(gates.reshape(-1))
     # Scatter-add combine on the materialized buffer.

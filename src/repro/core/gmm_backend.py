@@ -1,0 +1,284 @@
+"""Pluggable grouped-GEMM (gmm) backend registry.
+
+Every grouped GEMM in the MoEBlaze core funnels through two primitives:
+
+  * ``gmm(lhs, rhs, group_sizes)``    — (S, d) @ (E, d, h) -> (S, h), rows of
+    ``lhs`` grouped by expert (``group_sizes`` sums to <= S; trailing rows
+    belong to no group and produce zeros);
+  * ``gmm_dw(lhs, dout, group_sizes)``— (S, d), (S, h) -> (E, d, h), the
+    per-group weight gradient (contract the grouped row axis).
+
+Both accumulate in fp32 and return ``lhs.dtype``.  The paper's fast path is
+``jax.lax.ragged_dot[_general]``, but those symbols only exist on newer JAX —
+this registry makes the primitive swappable per target (MegaBlocks-style)
+instead of a hard import:
+
+  * ``ragged``  — ``jax.lax.ragged_dot`` / ``ragged_dot_general``.  The XLA
+    fast path; auto-disabled when either symbol is absent (e.g. JAX 0.4.37
+    ships ``ragged_dot`` but not ``ragged_dot_general``).
+  * ``segment`` — portable pure-``jnp`` fallback: per-group row mask + dense
+    dot with fp32 accumulation.  Runs on any JAX >= 0.4.x, any device.
+    Compute is O(E·S·d·h) like XLA's own CPU decomposition of ragged_dot;
+    it exists for correctness/portability, not speed.
+  * ``pallas``  — the ``kernels/gather_gmm.py`` work-item kernels (identity
+    gather; ``interpret=True`` on CPU, real lowering on TPU).
+
+Selection precedence: explicit ``backend=`` argument > the
+``REPRO_GMM_BACKEND`` environment variable > auto (first available of
+``ragged``, ``segment``).  ``pallas`` is never auto-selected: in interpret
+mode it is orders of magnitude slower than the XLA paths and exists as an
+explicitly requested kernel-validation target.
+
+    REPRO_GMM_BACKEND=segment python -m pytest -q          # force portable
+    gmm(lhs, rhs, sizes, backend="ragged")                  # force fast path
+
+The JAX-version support matrix lives in README.md; ``available_backends()``
+reports what works on the running install.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+ENV_VAR = "REPRO_GMM_BACKEND"
+
+# Auto-selection order: fast XLA path first, portable fallback second.
+_AUTO_PRIORITY = ("ragged", "segment")
+
+
+def _offsets_of(group_sizes: jax.Array) -> jax.Array:
+    """(E,) group sizes -> (E+1,) exclusive prefix-sum offsets."""
+    gs = group_sizes.astype(jnp.int32)
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(gs)])
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class RaggedBackend:
+    """``jax.lax.ragged_dot[_general]`` — the XLA grouped-GEMM fast path."""
+
+    name = "ragged"
+
+    @staticmethod
+    def available() -> bool:
+        return (hasattr(jax.lax, "ragged_dot")
+                and hasattr(jax.lax, "ragged_dot_general")
+                and hasattr(jax.lax, "RaggedDotDimensionNumbers"))
+
+    @staticmethod
+    def gmm(lhs, rhs, group_sizes):
+        out = jax.lax.ragged_dot(lhs, rhs, group_sizes.astype(jnp.int32),
+                                 preferred_element_type=jnp.float32)
+        return out.astype(lhs.dtype)
+
+    @staticmethod
+    def gmm_dw(lhs, dout, group_sizes):
+        dims = jax.lax.RaggedDotDimensionNumbers(
+            dot_dimension_numbers=(((0,), (0,)), ((), ())),  # contract rows
+            lhs_ragged_dimensions=[0],
+            rhs_group_dimensions=[])
+        out = jax.lax.ragged_dot_general(
+            lhs, dout, group_sizes.astype(jnp.int32), dims,
+            preferred_element_type=jnp.float32)
+        return out.astype(lhs.dtype)
+
+
+class SegmentBackend:
+    """Portable pure-``jnp`` grouped GEMM: per-group mask + dense dot.
+
+    A ``fori_loop`` over experts keeps the lowered program O(1) in E; each
+    step masks the rows of the current group and runs one dense fp32 GEMM.
+    Mathematically exact (no approximation), so it doubles as the oracle the
+    parity tests compare every other backend against.
+    """
+
+    name = "segment"
+
+    @staticmethod
+    def available() -> bool:
+        return True
+
+    @staticmethod
+    def gmm(lhs, rhs, group_sizes):
+        S = lhs.shape[0]
+        E, _, h = rhs.shape
+        off = _offsets_of(group_sizes)
+        rows = jnp.arange(S, dtype=jnp.int32)[:, None]
+
+        def body(e, acc):
+            w = jax.lax.dynamic_index_in_dim(rhs, e, 0, keepdims=False)
+            mask = (rows >= off[e]) & (rows < off[e + 1])
+            xm = jnp.where(mask, lhs, 0).astype(jnp.float32)
+            return acc + xm @ w.astype(jnp.float32)
+
+        acc = jnp.zeros((S, h), jnp.float32)
+        return jax.lax.fori_loop(0, E, body, acc).astype(lhs.dtype)
+
+    @staticmethod
+    def gmm_dw(lhs, dout, group_sizes):
+        E = group_sizes.shape[0]
+        d, h = lhs.shape[1], dout.shape[1]
+        off = _offsets_of(group_sizes)
+        rows = jnp.arange(lhs.shape[0], dtype=jnp.int32)[:, None]
+
+        def body(e, acc):
+            mask = (rows >= off[e]) & (rows < off[e + 1])
+            xm = jnp.where(mask, lhs, 0).astype(jnp.float32)
+            dw = xm.T @ dout.astype(jnp.float32)
+            return acc.at[e].set(dw)
+
+        acc = jnp.zeros((E, d, h), jnp.float32)
+        return jax.lax.fori_loop(0, E, body, acc).astype(lhs.dtype)
+
+
+def _pallas_gmm_impl(lhs, rhs, group_sizes):
+    from repro.kernels.gather_gmm import gather_gmm
+    S = lhs.shape[0]
+    h = rhs.shape[-1]
+    bh = 128 if h % 128 == 0 else h
+    return gather_gmm(lhs, jnp.arange(S, dtype=jnp.int32),
+                      _offsets_of(group_sizes), rhs,
+                      epilogue=False, bh=bh, interpret=True)
+
+
+def _pallas_dw_impl(lhs, dout, group_sizes):
+    from repro.kernels.gather_gmm import gmm_dw_pallas
+    dw = gmm_dw_pallas(lhs, dout, _offsets_of(group_sizes), interpret=True)
+    # Blocks of experts with no work items are never written by the
+    # kernel — zero them explicitly.
+    return jnp.where(group_sizes[:, None, None] > 0, dw,
+                     jnp.zeros((), dw.dtype))
+
+
+# ``pallas_call`` has no JVP rule, so the kernels are wrapped in custom VJPs
+# built from each other (the grouped GEMM is linear: d_lhs flows through the
+# transposed weights, d_rhs is exactly the grouped weight gradient).  This
+# keeps the backend contract uniform — every backend is differentiable by
+# plain autodiff, not just inside the MoE layer's hand-written VJP.
+
+
+@jax.custom_vjp
+def _pallas_gmm(lhs, rhs, group_sizes):
+    return _pallas_gmm_impl(lhs, rhs, group_sizes)
+
+
+def _pallas_gmm_fwd(lhs, rhs, group_sizes):
+    return _pallas_gmm_impl(lhs, rhs, group_sizes), (lhs, rhs, group_sizes)
+
+
+def _pallas_gmm_bwd(res, dout):
+    lhs, rhs, gs = res
+    dlhs = _pallas_gmm_impl(dout, jnp.swapaxes(rhs, 1, 2), gs)
+    drhs = _pallas_dw_impl(lhs, dout, gs)
+    return dlhs.astype(lhs.dtype), drhs.astype(rhs.dtype), None
+
+
+_pallas_gmm.defvjp(_pallas_gmm_fwd, _pallas_gmm_bwd)
+
+
+@jax.custom_vjp
+def _pallas_dw(lhs, dout, group_sizes):
+    return _pallas_dw_impl(lhs, dout, group_sizes)
+
+
+def _pallas_dw_fwd(lhs, dout, group_sizes):
+    return _pallas_dw_impl(lhs, dout, group_sizes), (lhs, dout, group_sizes)
+
+
+def _pallas_dw_bwd(res, ddw):
+    lhs, dout, gs = res
+    dlhs = _pallas_gmm_impl(dout, jnp.swapaxes(ddw, 1, 2), gs)
+    ddout = _pallas_gmm_impl(lhs, ddw, gs)
+    return dlhs.astype(lhs.dtype), ddout.astype(dout.dtype), None
+
+
+_pallas_dw.defvjp(_pallas_dw_fwd, _pallas_dw_bwd)
+
+
+class PallasBackend:
+    """The ``kernels/gather_gmm.py`` work-item kernels with an identity
+    gather (rows already in expert order).  ``interpret=True`` on CPU; on a
+    real TPU the same grid/work-item structure lowers natively."""
+
+    name = "pallas"
+
+    @staticmethod
+    def available() -> bool:
+        try:
+            import repro.kernels.gather_gmm  # noqa: F401
+        except Exception:  # pragma: no cover - import guard
+            return False
+        return True
+
+    @staticmethod
+    def gmm(lhs, rhs, group_sizes):
+        return _pallas_gmm(lhs, rhs, group_sizes)
+
+    @staticmethod
+    def gmm_dw(lhs, dout, group_sizes):
+        return _pallas_dw(lhs, dout, group_sizes)
+
+
+# ---------------------------------------------------------------------------
+# Registry + selection
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, object] = {
+    b.name: b for b in (RaggedBackend, SegmentBackend, PallasBackend)
+}
+
+
+def backend_names() -> list[str]:
+    """All registered backend names (available or not)."""
+    return list(_REGISTRY)
+
+
+def available_backends() -> list[str]:
+    """Backends that work on the running JAX install."""
+    return [n for n, b in _REGISTRY.items() if b.available()]
+
+
+def resolve_backend_name(name: str | None = None) -> str:
+    """Resolve ``name`` / ``$REPRO_GMM_BACKEND`` / auto to a concrete,
+    available backend name (raises on unknown or unavailable)."""
+    if name in (None, "", "auto"):
+        name = os.environ.get(ENV_VAR, "").strip() or None
+    if name in (None, "auto"):
+        for cand in _AUTO_PRIORITY:
+            if _REGISTRY[cand].available():
+                return cand
+        raise RuntimeError(
+            "no grouped-GEMM backend available on this JAX install "
+            f"(jax {jax.__version__})")
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown gmm backend {name!r}; known: {backend_names()}")
+    if not _REGISTRY[name].available():
+        raise RuntimeError(
+            f"gmm backend {name!r} is not available on jax "
+            f"{jax.__version__}; available: {available_backends()}")
+    return name
+
+
+def get_backend(name: str | None = None):
+    """Return the backend object for ``name`` (or the resolved default)."""
+    return _REGISTRY[resolve_backend_name(name)]
+
+
+def gmm(lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array,
+        *, backend: str | None = None) -> jax.Array:
+    """Grouped matmul: rows of ``lhs`` (grouped by ``group_sizes``) times the
+    matching ``rhs[g]``.  (S, d) @ (E, d, h) -> (S, h)."""
+    return get_backend(backend).gmm(lhs, rhs, group_sizes)
+
+
+def gmm_dw(lhs: jax.Array, dout: jax.Array, group_sizes: jax.Array,
+           *, backend: str | None = None) -> jax.Array:
+    """Per-group weight gradient: (S, d), (S, h) -> (E, d, h)."""
+    return get_backend(backend).gmm_dw(lhs, dout, group_sizes)

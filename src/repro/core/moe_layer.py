@@ -21,9 +21,11 @@ faithful to Algorithm 1 line 11 — ``Y_swi``.  ``save_yswi=False`` is the
 beyond-paper variant that recomputes ``Y_swi = SiLU(A)·B`` in the backward as
 well, trading one elementwise multiply for another (L·k, h) buffer.
 
-The grouped GEMMs use ``jax.lax.ragged_dot`` at the XLA level; the Pallas
-fused kernels in ``repro.kernels`` implement the same contract with explicit
-VMEM tiling for the TPU target (``interpret=True``-validated here).
+The grouped GEMMs go through the pluggable backend registry in
+``repro.core.gmm_backend`` (``ragged`` = ``jax.lax.ragged_dot[_general]``
+where available, ``segment`` = portable pure-jnp fallback, ``pallas`` = the
+``repro.kernels`` work-item kernels); select per call via ``backend=`` or
+globally via ``REPRO_GMM_BACKEND``.
 """
 
 from __future__ import annotations
@@ -32,35 +34,11 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.lax import RaggedDotDimensionNumbers, ragged_dot, ragged_dot_general
 
+from repro.core.gmm_backend import gmm, gmm_dw, resolve_backend_name
 from repro.core.routing import Dispatch
 
-# ---------------------------------------------------------------------------
-# Grouped-GEMM helpers
-# ---------------------------------------------------------------------------
-
-
-def gmm(lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array) -> jax.Array:
-    """Grouped matmul: rows of ``lhs`` (grouped by ``group_sizes``) times the
-    matching ``rhs[g]``.  (L*k, d) @ (E, d, h) -> (L*k, h)."""
-    out = ragged_dot(lhs, rhs, group_sizes,
-                     preferred_element_type=jnp.float32)
-    return out.astype(lhs.dtype)
-
-
-_DW_DIMS = RaggedDotDimensionNumbers(
-    dot_dimension_numbers=(((0,), (0,)), ((), ())),  # contract the row axis
-    lhs_ragged_dimensions=[0],
-    rhs_group_dimensions=[],
-)
-
-
-def gmm_dw(lhs: jax.Array, dout: jax.Array, group_sizes: jax.Array) -> jax.Array:
-    """Per-group weight gradient: (L*k, d), (L*k, h) -> (E, d, h)."""
-    out = ragged_dot_general(lhs, dout, group_sizes, _DW_DIMS,
-                             preferred_element_type=jnp.float32)
-    return out.astype(lhs.dtype)
+__all__ = ["moe_ffn_blaze", "gmm", "gmm_dw"]
 
 
 def _silu(a):
@@ -93,24 +71,26 @@ def _gate_per_slot(gates: jax.Array, token_index_map: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _moe_swiglu(save_yswi: bool, x, w1, w2, w3, gates,
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _moe_swiglu(save_yswi: bool, backend: str, x, w1, w2, w3, gates,
                 eti, off, tim, lens):
-    y, _ = _moe_swiglu_fwd(save_yswi, x, w1, w2, w3, gates, eti, off, tim, lens)
+    y, _ = _moe_swiglu_fwd(save_yswi, backend, x, w1, w2, w3, gates,
+                           eti, off, tim, lens)
     return y
 
 
-def _moe_swiglu_fwd(save_yswi, x, w1, w2, w3, gates, eti, off, tim, lens):
+def _moe_swiglu_fwd(save_yswi, backend, x, w1, w2, w3, gates,
+                    eti, off, tim, lens):
     del off
     L = x.shape[0]
     k = tim.shape[1]
     # On-the-fly gather from the *unpermuted* activations (transient).
     xg = jnp.take(x, eti, axis=0)                     # (L*k, d)
-    a = gmm(xg, w1, lens)                              # (L*k, h)
-    b = gmm(xg, w2, lens)                              # (L*k, h)
+    a = gmm(xg, w1, lens, backend=backend)             # (L*k, h)
+    b = gmm(xg, w2, lens, backend=backend)             # (L*k, h)
     y_swi = _silu(a) * b                               # (L*k, h)
     g_slot = _gate_per_slot(gates, tim, L * k)
-    p_out = gmm(y_swi, w3, lens)                       # (L*k, d) partials
+    p_out = gmm(y_swi, w3, lens, backend=backend)      # (L*k, d) partials
     # Combine: gather each token's k partials and contract with its gates.
     parts = jnp.take(p_out, tim.reshape(-1), axis=0).reshape(L, k, -1)
     y = jnp.einsum("lk,lkd->ld", gates.astype(parts.dtype), parts)
@@ -119,7 +99,7 @@ def _moe_swiglu_fwd(save_yswi, x, w1, w2, w3, gates, eti, off, tim, lens):
     return y, res
 
 
-def _moe_swiglu_bwd(save_yswi, res, dy):
+def _moe_swiglu_bwd(save_yswi, backend, res, dy):
     (x, w1, w2, w3, gates, eti, tim, lens, g_slot, a, b, y_swi) = res
     if y_swi is None:
         y_swi = _silu(a) * b                           # beyond-paper recompute
@@ -127,8 +107,9 @@ def _moe_swiglu_bwd(save_yswi, res, dy):
     #    index metadata (paper §3.2 step 1) — gather, no materialized buffer.
     dyg = jnp.take(dy, eti, axis=0)                    # (L*k, d), unscaled
     # 2. Final-projection grads (Algorithm 1 lines 18-20).
-    dw3 = gmm_dw(y_swi * g_slot[:, None].astype(y_swi.dtype), dyg, lens)
-    dyu = gmm(dyg, jnp.swapaxes(w3, 1, 2), lens)       # (L*k, h), unscaled
+    dw3 = gmm_dw(y_swi * g_slot[:, None].astype(y_swi.dtype), dyg, lens,
+                 backend=backend)
+    dyu = gmm(dyg, jnp.swapaxes(w3, 1, 2), lens, backend=backend)
     dgates_slot = jnp.sum(y_swi * dyu, axis=-1)        # (L*k,)
     dgates = jnp.take(dgates_slot, tim.reshape(-1)).reshape(gates.shape)
     dgates = dgates.astype(gates.dtype)
@@ -138,10 +119,10 @@ def _moe_swiglu_bwd(save_yswi, res, dy):
     db = dy_swi * _silu(a)
     # 4. First-layer grads; the routed-token gather is recomputed, not saved.
     xg = jnp.take(x, eti, axis=0)
-    dw1 = gmm_dw(xg, da, lens)
-    dw2 = gmm_dw(xg, db, lens)
-    dxg = gmm(da, jnp.swapaxes(w1, 1, 2), lens) + \
-        gmm(db, jnp.swapaxes(w2, 1, 2), lens)
+    dw1 = gmm_dw(xg, da, lens, backend=backend)
+    dw2 = gmm_dw(xg, db, lens, backend=backend)
+    dxg = gmm(da, jnp.swapaxes(w1, 1, 2), lens, backend=backend) + \
+        gmm(db, jnp.swapaxes(w2, 1, 2), lens, backend=backend)
     # 5. Token-gradient accumulation (paper §3.2 step 3).
     dx = jnp.zeros_like(x).at[eti].add(dxg.astype(x.dtype))
     return dx, dw1, dw2, dw3, dgates, None, None, None, None
@@ -155,40 +136,41 @@ _moe_swiglu.defvjp(_moe_swiglu_fwd, _moe_swiglu_bwd)
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _moe_mlp(act: str, x, w1, w3, gates, eti, off, tim, lens):
-    y, _ = _moe_mlp_fwd(act, x, w1, w3, gates, eti, off, tim, lens)
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _moe_mlp(act: str, backend: str, x, w1, w3, gates, eti, off, tim, lens):
+    y, _ = _moe_mlp_fwd(act, backend, x, w1, w3, gates, eti, off, tim, lens)
     return y
 
 
-def _moe_mlp_fwd(act, x, w1, w3, gates, eti, off, tim, lens):
+def _moe_mlp_fwd(act, backend, x, w1, w3, gates, eti, off, tim, lens):
     del off
     f, _ = _ACTS[act]
     L, k = tim.shape[0], tim.shape[1]
     xg = jnp.take(x, eti, axis=0)
-    a = gmm(xg, w1, lens)
+    a = gmm(xg, w1, lens, backend=backend)
     g_slot = _gate_per_slot(gates, tim, L * k)
-    p_out = gmm(f(a), w3, lens)
+    p_out = gmm(f(a), w3, lens, backend=backend)
     parts = jnp.take(p_out, tim.reshape(-1), axis=0).reshape(L, k, -1)
     y = jnp.einsum("lk,lkd->ld", gates.astype(parts.dtype), parts)
     # Smart checkpoint: save only the GEMM output `a`; act(a) is recomputed.
     return y, (x, w1, w3, gates, eti, tim, lens, g_slot, a)
 
 
-def _moe_mlp_bwd(act, res, dy):
+def _moe_mlp_bwd(act, backend, res, dy):
     f, df = _ACTS[act]
     (x, w1, w3, gates, eti, tim, lens, g_slot, a) = res
     fa = f(a)                                          # recompute (paper §5.2)
     dyg = jnp.take(dy, eti, axis=0)
-    dw3 = gmm_dw(fa * g_slot[:, None].astype(fa.dtype), dyg, lens)
-    dyu = gmm(dyg, jnp.swapaxes(w3, 1, 2), lens)
+    dw3 = gmm_dw(fa * g_slot[:, None].astype(fa.dtype), dyg, lens,
+                 backend=backend)
+    dyu = gmm(dyg, jnp.swapaxes(w3, 1, 2), lens, backend=backend)
     dgates_slot = jnp.sum(fa * dyu, axis=-1)
     dgates = jnp.take(dgates_slot, tim.reshape(-1)).reshape(gates.shape)
     dgates = dgates.astype(gates.dtype)
     da = dyu * g_slot[:, None].astype(dyu.dtype) * df(a)
     xg = jnp.take(x, eti, axis=0)
-    dw1 = gmm_dw(xg, da, lens)
-    dxg = gmm(da, jnp.swapaxes(w1, 1, 2), lens)
+    dw1 = gmm_dw(xg, da, lens, backend=backend)
+    dxg = gmm(da, jnp.swapaxes(w1, 1, 2), lens, backend=backend)
     dx = jnp.zeros_like(x).at[eti].add(dxg.astype(x.dtype))
     return dx, dw1, dw3, dgates, None, None, None, None
 
@@ -204,7 +186,8 @@ _moe_mlp.defvjp(_moe_mlp_fwd, _moe_mlp_bwd)
 def moe_ffn_blaze(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
                   w1: jax.Array, w3: jax.Array, w2: jax.Array | None = None,
                   *, activation: str = "swiglu",
-                  save_yswi: bool = True) -> jax.Array:
+                  save_yswi: bool = True,
+                  backend: str | None = None) -> jax.Array:
     """MoEBlaze expert FFN.
 
     Args:
@@ -216,14 +199,19 @@ def moe_ffn_blaze(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
       w3: (E, h, d) down projection.
       activation: "swiglu" | "silu" | "relu" | "gelu".
       save_yswi: paper-faithful (True) saves Y_swi; False recomputes it.
+      backend: grouped-GEMM backend name ("ragged" | "segment" | "pallas");
+        None/"auto" honors ``REPRO_GMM_BACKEND`` then auto-detects.
     """
+    # Resolve to a concrete name here so the custom-VJP static arg is a
+    # stable hashable and the env var is read at trace time.
+    backend = resolve_backend_name(backend)
     d = dispatch
     if activation == "swiglu":
         assert w2 is not None
-        return _moe_swiglu(save_yswi, x, w1, w2, w3, gates,
+        return _moe_swiglu(save_yswi, backend, x, w1, w2, w3, gates,
                            d.expert_token_indices, d.expert_token_offsets,
                            d.token_index_map, d.expert_lengths)
     assert w2 is None or activation == "swiglu"
-    return _moe_mlp(activation, x, w1, w3, gates,
+    return _moe_mlp(activation, backend, x, w1, w3, gates,
                     d.expert_token_indices, d.expert_token_offsets,
                     d.token_index_map, d.expert_lengths)

@@ -43,10 +43,12 @@ def make_work_items(offsets: jax.Array, n_tiles: int, bl: int,
     """Static-shape (tile × expert) work-item metadata.
 
     Returns int32 arrays of length ``W = n_tiles + num_experts``:
-      (tile, expert, lo, hi, first) — ``[lo, hi)`` is the row range of
-    ``expert`` inside ``tile``; ``first`` marks the first item of each tile
-    (which must initialize the output block).  Invalid trailing items point at
-    the last tile with an empty range (benign += 0).
+      (tile, expert, lo, hi, first, efirst) — ``[lo, hi)`` is the row range
+    of ``expert`` inside ``tile``; ``first`` marks the first item of each tile
+    and ``efirst`` the first item of each *expert* (whichever output block the
+    kernel accumulates into must be initialized on its first visit).  Invalid
+    trailing items point at the last tile / the last valid item's expert with
+    an empty range (benign += 0, and adjacent to the block they revisit).
     """
     E = num_experts
     W = n_tiles + E
@@ -57,6 +59,7 @@ def make_work_items(offsets: jax.Array, n_tiles: int, bl: int,
     flat_valid = valid.reshape(-1)
     rank = jnp.cumsum(flat_valid) - flat_valid                   # dest slot
     first = valid & (jnp.cumsum(valid, axis=1) == 1)
+    efirst = valid & (jnp.cumsum(valid, axis=0) == 1)
 
     def scatter(vals, fill):
         out = jnp.full((W,), fill, jnp.int32)
@@ -73,13 +76,19 @@ def make_work_items(offsets: jax.Array, n_tiles: int, bl: int,
     wi_lo = scatter(lo, 0)
     wi_hi = scatter(hi, 0)
     wi_first = scatter(first, 0)
-    # Anything at rank >= n_valid is a filler: empty range on the last tile.
+    wi_efirst = scatter(efirst, 0)
+    # Anything at rank >= n_valid is a filler: empty range on the last tile,
+    # pointing at the last valid item's expert so block revisits stay
+    # adjacent (TPU grids flush an output block once it stops being visited).
     fill_mask = jnp.arange(W) >= n_valid
+    last_expert = wi_expert[jnp.maximum(n_valid - 1, 0)]
     wi_tile = jnp.where(fill_mask, n_tiles - 1, wi_tile)
+    wi_expert = jnp.where(fill_mask, last_expert, wi_expert)
     wi_lo = jnp.where(fill_mask, 0, wi_lo)
     wi_hi = jnp.where(fill_mask, 0, wi_hi)
     wi_first = jnp.where(fill_mask, 0, wi_first)
-    return wi_tile, wi_expert, wi_lo, wi_hi, wi_first
+    wi_efirst = jnp.where(fill_mask, 0, wi_efirst)
+    return wi_tile, wi_expert, wi_lo, wi_hi, wi_first, wi_efirst
 
 
 def _kernel(idx_ref, tile_ref, expert_ref, lo_ref, hi_ref, first_ref,
@@ -154,7 +163,7 @@ def gather_gmm(x: jax.Array, idx: jax.Array, offsets: jax.Array,
     n_tiles = S_pad // bl
     assert h % bh == 0
     nh = h // bh
-    wi_tile, wi_expert, wi_lo, wi_hi, wi_first = make_work_items(
+    wi_tile, wi_expert, wi_lo, wi_hi, wi_first, _ = make_work_items(
         offsets.astype(jnp.int32), n_tiles, bl, E)
     W = wi_tile.shape[0]
 
@@ -216,3 +225,82 @@ def gather_gmm(x: jax.Array, idx: jax.Array, offsets: jax.Array,
     if n_out == 1:
         return out[:S]
     return tuple(o[:S] for o in out)
+
+
+# ---------------------------------------------------------------------------
+# Grouped weight gradient on the same work-item machinery
+# ---------------------------------------------------------------------------
+
+
+def _dw_kernel(tile_ref, expert_ref, lo_ref, hi_ref, efirst_ref,
+               x_ref, g_ref, dw_ref, *, bl: int):
+    wi = pl.program_id(0)
+    lo, hi = lo_ref[wi], hi_ref[wi]
+    first = efirst_ref[wi] == 1
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bl, 1), 0)
+    mask = (rows >= lo) & (rows < hi)
+    xt = jnp.where(mask, x_ref[...], 0).astype(jnp.float32)
+    # Contract the row axis: (bl, d), (bl, h) -> (d, h).  Rows outside this
+    # item's range are zeroed in xt, so the full-tile dot is exact.
+    dwt = jax.lax.dot_general(xt, g_ref[...].astype(jnp.float32),
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(first)
+    def _init():
+        dw_ref[...] = dwt[None].astype(dw_ref.dtype)
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        dw_ref[...] += dwt[None].astype(dw_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "interpret"))
+def gmm_dw_pallas(lhs: jax.Array, dout: jax.Array, offsets: jax.Array,
+                  *, bl: int = 128, interpret: bool = True) -> jax.Array:
+    """Per-group weight gradient (S, d), (S, h) -> (E, d, h) on the
+    work-item grid.
+
+    ``lhs``/``dout`` rows are already in expert order; each work item masks
+    its expert's row range inside the tile and accumulates ``x_tile^T @
+    dout_tile`` into ``dw[expert]``.  An expert's work items are consecutive
+    in the tile-major item order (its row segment is contiguous), so the
+    output block is only ever revisited on adjacent grid steps — the
+    accumulation pattern TPU grids require.  Cross-tile partials genuinely
+    overlap (unlike the forward's disjoint row ranges), so the output is
+    fp32 and cast to ``lhs.dtype`` only at the end — the backend contract's
+    fp32 accumulation.  Blocks of *empty* experts are never visited and
+    must be zeroed by the caller.
+    """
+    S, d = lhs.shape
+    h = dout.shape[1]
+    E = offsets.shape[0] - 1
+    bl = min(bl, max(S, 8))
+    S_pad = ((S + bl - 1) // bl) * bl
+    lhs_p = jnp.pad(lhs, ((0, S_pad - S), (0, 0)))
+    dout_p = jnp.pad(dout, ((0, S_pad - S), (0, 0)))
+    n_tiles = S_pad // bl
+    wi_tile, wi_expert, wi_lo, wi_hi, _, wi_efirst = make_work_items(
+        offsets.astype(jnp.int32), n_tiles, bl, E)
+    W = wi_tile.shape[0]
+
+    def row_map(wi, *scalars):
+        return (scalars[0][wi], 0)       # wi_tile
+
+    def dw_map(wi, *scalars):
+        return (scalars[1][wi], 0, 0)    # wi_expert
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(W,),
+        in_specs=[pl.BlockSpec((bl, d), row_map),
+                  pl.BlockSpec((bl, h), row_map)],
+        out_specs=pl.BlockSpec((1, d, h), dw_map),
+    )
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, bl=bl),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, d, h), jnp.float32),
+        interpret=interpret,
+    )(wi_tile, wi_expert, wi_lo, wi_hi, wi_efirst, lhs_p, dout_p)
+    return out.astype(lhs.dtype)

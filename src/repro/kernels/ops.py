@@ -72,13 +72,14 @@ def _dsilu(a):
     return s * (1.0 + a * (1.0 - s))
 
 
-@jax.custom_vjp
-def _moe_pallas(x, w1, w2, w3, gates, eti, off, tim, lens):
-    y, _ = _moe_pallas_fwd(x, w1, w2, w3, gates, eti, off, tim, lens)
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _moe_pallas(backend, x, w1, w2, w3, gates, eti, off, tim, lens):
+    y, _ = _moe_pallas_fwd(backend, x, w1, w2, w3, gates, eti, off, tim,
+                           lens)
     return y
 
 
-def _moe_pallas_fwd(x, w1, w2, w3, gates, eti, off, tim, lens):
+def _moe_pallas_fwd(backend, x, w1, w2, w3, gates, eti, off, tim, lens):
     S = eti.shape[0]
     # Fused gather + dual GEMM + SwiGLU epilogue (paper §5.2 kernel).
     y_swi, a, b = gather_gmm(x, eti, off, w1, w2, save_ab=True)
@@ -89,7 +90,7 @@ def _moe_pallas_fwd(x, w1, w2, w3, gates, eti, off, tim, lens):
     return y, (x, w1, w2, w3, gates, eti, off, tim, lens, a, b, y_swi)
 
 
-def _moe_pallas_bwd(res, dy):
+def _moe_pallas_bwd(backend, res, dy):
     (x, w1, w2, w3, gates, eti, off, tim, lens, a, b, y_swi) = res
     L, k = tim.shape
     S = eti.shape[0]
@@ -99,21 +100,22 @@ def _moe_pallas_bwd(res, dy):
     # Expand output grads to slots (gather through the index metadata).
     dyg = jnp.take(dy, eti, axis=0)
     # dW3 / dY_swi via grouped GEMMs (gather_gmm with identity index).
-    from repro.core.moe_layer import gmm_dw
-    dw3 = gmm_dw(y_swi * g_slot[:, None].astype(y_swi.dtype), dyg, lens)
+    from repro.core.gmm_backend import gmm_dw
+    dw3 = gmm_dw(y_swi * g_slot[:, None].astype(y_swi.dtype), dyg, lens,
+                 backend=backend)
     dyu = gather_gmm(dyg, ident, off, jnp.swapaxes(w3, 1, 2), epilogue=False)
     dgates = jnp.take(jnp.sum(y_swi * dyu, -1),
                       tim.reshape(-1)).reshape(gates.shape).astype(gates.dtype)
     dy_swi = dyu * g_slot[:, None].astype(dyu.dtype)
     # Fused SwiGLU backward (SiLU recomputed inside the kernels).
-    from repro.core.moe_layer import gmm
+    from repro.core.gmm_backend import gmm
     da = dy_swi * b * _dsilu(a)
     db = dy_swi * _silu(a)
     xg = jnp.take(x, eti, axis=0)
-    dw1 = gmm_dw(xg, da, lens)
-    dw2 = gmm_dw(xg, db, lens)
-    dxg = gmm(da, jnp.swapaxes(w1, 1, 2), lens) + \
-        gmm(db, jnp.swapaxes(w2, 1, 2), lens)
+    dw1 = gmm_dw(xg, da, lens, backend=backend)
+    dw2 = gmm_dw(xg, db, lens, backend=backend)
+    dxg = gmm(da, jnp.swapaxes(w1, 1, 2), lens, backend=backend) + \
+        gmm(db, jnp.swapaxes(w2, 1, 2), lens, backend=backend)
     dx = jnp.zeros_like(x).at[eti].add(dxg.astype(x.dtype))
     return dx, dw1, dw2, dw3, dgates, None, None, None, None
 
@@ -122,10 +124,17 @@ _moe_pallas.defvjp(_moe_pallas_fwd, _moe_pallas_bwd)
 
 
 def moe_ffn_blaze_pallas(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
-                         w1: jax.Array, w3: jax.Array,
-                         w2: jax.Array) -> jax.Array:
-    """Kernel-composed MoEBlaze SwiGLU expert layer (single device)."""
+                         w1: jax.Array, w3: jax.Array, w2: jax.Array,
+                         *, backend: str | None = None) -> jax.Array:
+    """Kernel-composed MoEBlaze SwiGLU expert layer (single device).
+
+    ``backend`` selects the grouped-GEMM backend for the *backward* GEMMs
+    (the forward runs the fused Pallas kernels by construction); resolved
+    here so the custom-VJP static arg is stable.
+    """
+    from repro.core.gmm_backend import resolve_backend_name
     d = dispatch
-    return _moe_pallas(x, w1, w2, w3, gates.astype(x.dtype),
+    return _moe_pallas(resolve_backend_name(backend), x, w1, w2, w3,
+                       gates.astype(x.dtype),
                        d.expert_token_indices, d.expert_token_offsets,
                        d.token_index_map, d.expert_lengths)

@@ -41,13 +41,16 @@ def fused_swiglu_bwd_w_ref(x, dy, a, b):
 
 def gather_gmm_ref(x, idx, offsets, w1, w2=None, *, epilogue=True):
     """Gather rows then grouped matmul (materialized — the thing the kernel
-    avoids), as the correctness oracle."""
+    avoids), as the correctness oracle.  Uses the ``segment`` gmm backend:
+    the pure-jnp rendering that exists on every supported JAX."""
+    from repro.core.gmm_backend import get_backend
+    seg = get_backend("segment")
     xg = jnp.take(x, idx, axis=0).astype(jnp.float32)
     lens = jnp.diff(offsets)
-    a = jax.lax.ragged_dot(xg, w1.astype(jnp.float32), lens)
+    a = seg.gmm(xg, w1.astype(jnp.float32), lens)
     if w2 is None:
         return a.astype(x.dtype)
-    b = jax.lax.ragged_dot(xg, w2.astype(jnp.float32), lens)
+    b = seg.gmm(xg, w2.astype(jnp.float32), lens)
     y = silu(a) * b if epilogue else a
     return (y.astype(x.dtype), a.astype(x.dtype), b.astype(x.dtype))
 

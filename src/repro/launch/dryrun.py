@@ -8,6 +8,10 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k --multi-pod
   PYTHONPATH=src python -m repro.launch.dryrun --all --out EXPERIMENTS/dryrun.jsonl
+
+``--gmm-backend`` pins the grouped-GEMM backend (repro.core.gmm_backend) for
+every MoE lowering in the run — e.g. ``--gmm-backend segment`` probes the
+portable path, ``ragged`` the XLA fast path on newer JAX.
 """
 
 import os
@@ -186,9 +190,11 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     probes (1 and 2 pattern-groups) and extrapolated linearly:
     ``full = B + (G-1)·(C-B)`` — exact for homogeneous layer stacks.
     """
+    from repro.core.gmm_backend import resolve_backend_name
     mesh = make_production_mesh(multi_pod=multi_pod)
     rec = {"arch": arch, "shape": shape_name,
-           "mesh": "2x16x16" if multi_pod else "16x16"}
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "gmm_backend": resolve_backend_name()}
     out, skip, cfg = _compile_once(arch, shape_name, mesh, cfg_overrides,
                                    microbatches=microbatches)
     if skip:
@@ -284,8 +290,14 @@ def main(argv=None):
                          "only needs the lowering/memory proof)")
     ap.add_argument("--tag", default=None,
                     help="label recorded with each JSONL row (perf log)")
+    ap.add_argument("--gmm-backend", default=None,
+                    help="grouped-GEMM backend for MoE lowerings "
+                         "(ragged | segment | pallas; default auto)")
     args = ap.parse_args(argv)
     overrides = json.loads(args.override) if args.override else None
+    if args.gmm_backend:
+        from repro.core.gmm_backend import ENV_VAR, resolve_backend_name
+        os.environ[ENV_VAR] = resolve_backend_name(args.gmm_backend)
 
     pairs = []
     if args.all:

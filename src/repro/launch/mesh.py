@@ -3,23 +3,18 @@ touches jax device state (the dry-run sets XLA_FLAGS before first init)."""
 
 from __future__ import annotations
 
-import jax
-
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many local devices exist (tests)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

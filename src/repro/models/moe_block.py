@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import routing
 from repro.core.baseline import moe_ffn_dense, moe_ffn_megablocks
 from repro.core.checkpoint import MOE_GATES, tag
@@ -82,15 +83,17 @@ def _moe_local(xf: jax.Array, p: dict, cfg):
         gates = tag(g.topk_weights.astype(xf.dtype), MOE_GATES)
         if cfg.moe_impl == "megablocks":
             y = moe_ffn_megablocks(xf, gates, disp, p["w1"], p["w3"],
-                                   p.get("w2"), activation=cfg.ffn_act)
+                                   p.get("w2"), activation=cfg.ffn_act,
+                                   backend=cfg.gmm_backend)
         elif cfg.moe_impl == "blaze_pallas":
             from repro.kernels.ops import moe_ffn_blaze_pallas
             y = moe_ffn_blaze_pallas(xf, gates, disp, p["w1"], p["w3"],
-                                     p["w2"])
+                                     p["w2"], backend=cfg.gmm_backend)
         else:
             y = moe_ffn_blaze(xf, gates, disp, p["w1"], p["w3"], p.get("w2"),
                               activation=cfg.ffn_act,
-                              save_yswi=cfg.save_yswi)
+                              save_yswi=cfg.save_yswi,
+                              backend=cfg.gmm_backend)
     aux = (cfg.aux_loss_weight *
            routing.load_balance_loss(g.router_probs, g.topk_experts, E)
            + cfg.z_loss_weight * routing.router_z_loss(g.logits))
@@ -197,10 +200,10 @@ def moe_sublayer(x: jax.Array, p: dict, cfg, *, mesh=None,
         aux = jax.lax.pmean(aux, all_axes)
         return y.reshape(Bl, Sl, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, p_specs),
         out_specs=(x_spec, P()),
-        check_vma=False,
+        check=False,
     )(x, p)
     return y, aux

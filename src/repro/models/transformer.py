@@ -14,8 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.checkpoint import POLICIES
 from repro.models import ssm
-from repro.models.attention import (KVCache, attention_sublayer,
-                                    init_attn_params, init_kv_cache)
+from repro.models.attention import (attention_sublayer, init_attn_params,
+                                    init_kv_cache)
 from repro.models.common import dense_init, rms_norm, softcap
 from repro.models.ffn import ffn_sublayer, init_ffn_params
 from repro.models.moe_block import init_moe_params, moe_sublayer

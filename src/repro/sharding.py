@@ -15,7 +15,6 @@ Strategy (DESIGN.md §5):
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

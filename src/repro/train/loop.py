@@ -5,7 +5,6 @@ under a mesh (launch/train.py passes shardings)."""
 from __future__ import annotations
 
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp

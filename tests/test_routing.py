@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is an optional test extra; fall back to fixed examples
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.routing import (build_dispatch, build_dispatch_sort,
                                 load_balance_loss, top_k_gating)

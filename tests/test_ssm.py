@@ -2,7 +2,6 @@
 and decode-step consistency with the training scan."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

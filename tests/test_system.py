@@ -1,8 +1,6 @@
 """End-to-end behaviour tests for the MoEBlaze reproduction."""
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import PAPER_CONFS, get_config
 from repro.configs.base import TrainConfig
