@@ -1,116 +1,20 @@
-"""Kernel-level benchmarks: fused vs unfused SwiGLU (HLO bytes/ops from
-cost analysis — the memory-traffic claim of paper §5.2), gather-GMM vs
-materialized gather+GMM, and the grouped-GEMM backend axis (every available
-``repro.core.gmm_backend`` backend on the same routed workload)."""
+"""Back-compat shim — the kernel benchmarks moved into the importable harness
+at ``repro.bench.timing`` (tracked via ``BENCH_kernels.json``; run them via
+``python -m repro.bench --suite kernels``)."""
 
-from __future__ import annotations
+from repro.bench.timing import (gmm_backend_entries, hlo_cost, kernels_suite,
+                                legacy_rows, median_time_us,
+                                pallas_kernel_entries,
+                                swiglu_traffic_entries)
 
-import time
-
-import jax
-import jax.numpy as jnp
-
-
-def _cost(fn, *args):
-    c = jax.jit(fn).lower(*args).compile().cost_analysis()
-    if isinstance(c, list):
-        c = c[0]
-    return float(c.get("flops", 0)), float(c.get("bytes accessed", 0))
-
-
-def swiglu_traffic(L=4096, d=1024, h=4096, dtype=jnp.bfloat16):
-    """HLO bytes for fused-policy SwiGLU fwd+bwd (recompute SiLU) vs naive
-    autodiff (saves every elementwise intermediate)."""
-    sds = jax.ShapeDtypeStruct
-    x, w1, w2 = sds((L, d), dtype), sds((d, h), dtype), sds((d, h), dtype)
-
-    def naive(x, w1, w2):
-        return (jax.nn.silu(x @ w1) * (x @ w2)).astype(jnp.float32).sum()
-
-    from repro.core.checkpoint import POLICIES
-    from repro.core.checkpoint import tag, FFN_A, FFN_B
-
-    def paper_ckpt(x, w1, w2):
-        def inner(x):
-            a = tag(x @ w1, FFN_A)
-            b = tag(x @ w2, FFN_B)
-            return jax.nn.silu(a) * b
-        y = jax.checkpoint(inner, policy=POLICIES["paper_min"])(x)
-        return y.astype(jnp.float32).sum()
-
-    rows = []
-    for name, f in (("naive", naive), ("paper_ckpt", paper_ckpt)):
-        fl, by = _cost(jax.grad(f, argnums=(0, 1, 2)), x, w1, w2)
-        rows.append((f"swiglu_traffic_{name}", 0.0,
-                     f"flops={fl:.3e};bytes={by:.3e}"))
-    return rows
-
-
-def pallas_kernel_time(L=1024, d=256, h=512, iters=3):
-    """Wall time of the Pallas kernels in interpret mode (correctness-path
-    cost only — interpret mode is not representative of TPU speed)."""
-    from repro.kernels.fused_swiglu import fused_swiglu_fwd
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (L, d), jnp.float32)
-    w1 = jax.random.normal(key, (d, h), jnp.float32) * 0.05
-    w2 = jax.random.normal(key, (d, h), jnp.float32) * 0.05
-    out = fused_swiglu_fwd(x, w1, w2)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fused_swiglu_fwd(x, w1, w2)
-    jax.block_until_ready(out)
-    us = (time.perf_counter() - t0) / iters * 1e6
-    return [("pallas_fused_swiglu_interpret", us, f"L={L},d={d},h={h}")]
-
-
-def gmm_backend_bench(S=2048, d=256, h=512, E=8, iters=3, *,
-                      include_pallas=False):
-    """Compare every available grouped-GEMM backend on one routed workload:
-    wall time (fwd + dw) and the jitted forward's HLO flops/bytes.
-
-    ``pallas`` runs in interpret mode on CPU — wall time there measures the
-    interpreter, not the kernel, so it is opt-in.
-    """
-    from repro.core import gmm_backend as GB
-    key = jax.random.PRNGKey(0)
-    ks = jax.random.split(key, 3)
-    lhs = jax.random.normal(ks[0], (S, d), jnp.float32)
-    rhs = jax.random.normal(ks[1], (E, d, h), jnp.float32) * 0.05
-    dout = jax.random.normal(ks[2], (S, h), jnp.float32)
-    base = S // E
-    gs = jnp.asarray([base] * (E - 1) + [S - base * (E - 1)], jnp.int32)
-
-    rows = []
-    for name in GB.available_backends():
-        if name == "pallas" and not include_pallas:
-            continue
-
-        def fwd(lhs, rhs, gs, _name=name):
-            return GB.gmm(lhs, rhs, gs, backend=_name)
-
-        def dw(lhs, dout, gs, _name=name):
-            return GB.gmm_dw(lhs, dout, gs, backend=_name)
-
-        fl, by = _cost(fwd, lhs, rhs, gs)
-        jf, jd = jax.jit(fwd), jax.jit(dw)
-        jax.block_until_ready((jf(lhs, rhs, gs), jd(lhs, dout, gs)))
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            out = (jf(lhs, rhs, gs), jd(lhs, dout, gs))
-        jax.block_until_ready(out)
-        us = (time.perf_counter() - t0) / iters * 1e6
-        rows.append((f"gmm_backend_{name}", us,
-                     f"S={S},d={d},h={h},E={E};flops={fl:.3e};bytes={by:.3e}"))
-    return rows
+__all__ = ["gmm_backend_entries", "hlo_cost", "kernels_suite", "legacy_rows",
+           "median_time_us", "pallas_kernel_entries",
+           "swiglu_traffic_entries", "run"]
 
 
 def run(print_fn=print, *, quick: bool = False):
-    rows = []
-    rows += swiglu_traffic(L=1024 if quick else 4096)
-    rows += pallas_kernel_time(L=256 if quick else 1024)
-    rows += gmm_backend_bench(S=512 if quick else 2048,
-                              include_pallas=quick)
+    """Legacy CSV-row interface over the record-entry suite."""
+    rows = legacy_rows(kernels_suite(small=quick))
     for r in rows:
         print_fn(f"{r[0]}: {r[1]:.1f}us {r[2]}")
     return rows

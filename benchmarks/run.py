@@ -1,13 +1,14 @@
-"""Benchmark harness entry point — one function per paper table/figure.
+"""Legacy CSV benchmark entry point — a thin CLI over ``repro.bench``.
 
 Emits ``name,us_per_call,derived`` CSV (stdout) plus human-readable logs.
 
-  paper_tables  — Figures 3-6: activation memory + step time + dispatch build
-                  for conf1..conf7 x {SiLU, SwiGLU}, MoEBlaze vs MegaBlocks-style.
-  kernel_bench  — §5.2 fused-SwiGLU traffic + Pallas interpret timings.
-  roofline      — summarizes EXPERIMENTS/dryrun.jsonl if present.
+  paper        — Figures 3-6 analogues (``repro.bench.paper_tables``).
+  kernels      — §5.2 traffic + backend/kernel timings (``repro.bench.timing``).
+  roofline     — summarizes EXPERIMENTS/dryrun.jsonl if present.
 
-``--quick`` runs a reduced sweep (used by CI/tests).
+``--quick`` runs a reduced sweep (used by CI/tests).  For tracked,
+regression-gated records use ``python -m repro.bench`` instead (see README
+§Benchmark harness).
 """
 
 from __future__ import annotations
@@ -48,13 +49,15 @@ def main() -> None:
 
     rows = []
     if args.only in (None, "paper"):
-        from benchmarks import paper_tables
+        from repro.bench import paper_tables
         _log("== paper tables (Figures 3-6 analogues) ==")
         rows += paper_tables.run(print_fn=_log, quick=args.quick)
     if args.only in (None, "kernels"):
-        from benchmarks import kernel_bench
+        from repro.bench.timing import kernels_suite, legacy_rows
         _log("== kernel benchmarks ==")
-        rows += kernel_bench.run(print_fn=_log, quick=args.quick)
+        for r in legacy_rows(kernels_suite(small=args.quick)):
+            _log(f"{r[0]}: {r[1]:.1f}us {r[2]}")
+            rows.append(r)
     if args.only in (None, "roofline"):
         rows += roofline_rows()
 

@@ -8,9 +8,9 @@ saved-residual accounting.
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.paper_tables import IMPLS, residual_bytes
+from repro.bench.paper_tables import IMPLS, residual_bytes
 from repro.configs.paper_tables import PAPER_TABLE1
 
 

@@ -1,0 +1,17 @@
+"""Memory/perf regression harness (``python -m repro.bench``).
+
+Unifies the loose ``benchmarks/*.py`` scripts into an importable, tested
+subsystem: ``memory`` (activation-memory accounting), ``timing``
+(kernel/backend wall time + HLO traffic), ``record`` (the tracked
+``BENCH_*.json`` schema and the ``--check`` regression gate), and
+``paper_tables`` (Figures 3-6 analogues).  See README §Benchmark harness.
+"""
+
+from repro.bench.record import (DEFAULT_TOLERANCE_PCT, SCHEMA_VERSION,
+                                check_records, compare_records, entry,
+                                load_record, make_record, write_record)
+
+__all__ = [
+    "DEFAULT_TOLERANCE_PCT", "SCHEMA_VERSION", "check_records",
+    "compare_records", "entry", "load_record", "make_record", "write_record",
+]

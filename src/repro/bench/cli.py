@@ -1,0 +1,101 @@
+"""``python -m repro.bench`` — run the tracked benchmark suites and/or gate
+against the committed baselines.
+
+    python -m repro.bench --small              # run + refresh BENCH_*.json
+    python -m repro.bench --small --check      # run + fail on regression
+    python -m repro.bench --check --record r.json   # gate a pre-built record
+
+Default mode writes ``BENCH_kernels.json`` / ``BENCH_memory.json`` to
+``--baseline-dir`` (the repo root — commit them; they ARE the baseline).
+``--check`` never rewrites baselines: it runs the suites (or loads
+``--record``), compares entry-by-entry against the committed files, prints a
+report, and exits 1 on any gated regression.  ``--out-dir`` additionally
+saves the freshly measured records (CI uploads these as artifacts).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.bench import record as R
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
+
+def _run_suite(suite: str, small: bool) -> dict:
+    if suite == "kernels":
+        from repro.bench.timing import kernels_suite
+        entries = kernels_suite(small=small)
+    elif suite == "memory":
+        from repro.bench.memory import memory_suite
+        entries = memory_suite(small=small)
+    else:
+        raise ValueError(suite)
+    return R.make_record(suite, entries, config={"small": small})
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.bench",
+                                 description=__doc__.split("\n\n")[0])
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "kernels", "memory"])
+    ap.add_argument("--small", action="store_true",
+                    help="reduced sweep (CI / tests)")
+    ap.add_argument("--check", action="store_true",
+                    help="compare against committed baselines; exit 1 on "
+                         "regression; never rewrite baselines")
+    ap.add_argument("--record", default=None,
+                    help="with --check: gate this pre-built record file "
+                         "instead of running the suites")
+    ap.add_argument("--baseline", default=None,
+                    help="explicit baseline record file (default: the "
+                         "committed BENCH_<suite>.json)")
+    ap.add_argument("--baseline-dir", default=_REPO_ROOT,
+                    help="where committed BENCH_*.json live / are written")
+    ap.add_argument("--out-dir", default=None,
+                    help="also write freshly measured records here "
+                         "(artifacts; independent of the baselines)")
+    args = ap.parse_args(argv)
+
+    if args.record:
+        if not args.check:
+            ap.error("--record only makes sense with --check")
+        records = [R.load_record(args.record)]
+    else:
+        suites = ["kernels", "memory"] if args.suite == "all" else [args.suite]
+        records = []
+        for suite in suites:
+            print(f"# running {suite} suite (small={args.small}) ...",
+                  file=sys.stderr)
+            records.append(_run_suite(suite, args.small))
+
+    if args.out_dir:
+        os.makedirs(args.out_dir, exist_ok=True)
+        for rec in records:
+            path = os.path.join(args.out_dir, R.BENCH_FILES[rec["suite"]])
+            print(f"# wrote {R.write_record(rec, path)}", file=sys.stderr)
+
+    if not args.check:
+        for rec in records:
+            path = os.path.join(args.baseline_dir, R.BENCH_FILES[rec["suite"]])
+            print(f"# baseline updated: {R.write_record(rec, path)}")
+        return 0
+
+    ok = True
+    for rec in records:
+        base_path = args.baseline or os.path.join(
+            args.baseline_dir, R.BENCH_FILES[rec["suite"]])
+        if not os.path.exists(base_path):
+            print(f"MISSING BASELINE {base_path} for suite {rec['suite']!r} "
+                  "(run `python -m repro.bench` and commit the result)")
+            ok = False
+            continue
+        rec_ok, lines = R.check_records(rec, R.load_record(base_path))
+        print(f"== {rec['suite']} vs {base_path} ==")
+        for line in lines:
+            print(line)
+        ok = ok and rec_ok
+    return 0 if ok else 1

@@ -1,0 +1,182 @@
+"""Activation-memory accounting — the harness behind the paper's >50%
+activation-saving claim (§5.2), made regression-testable.
+
+Three independent accountants per (model config x checkpoint policy x
+grouped-GEMM backend), all on abstract shapes (no arrays allocated):
+
+  * **measured** — ``jax.jit(grad(loss)).lower(...).compile()
+    .memory_analysis()``: XLA's temp/argument/output buffer sizes for the
+    compiled fwd+bwd;
+  * **autodiff residuals** — ``saved_residuals`` (the JAX analogue of the
+    paper's PyTorch saved-tensor hooks), parameters excluded — what autodiff
+    *saves* under the policy;
+  * **static estimate** — ``core.checkpoint.estimate_saved_bytes``, computed
+    from the policy's tag set and the config's shapes alone.  Exact for the
+    name-based policies and completely version-independent, so it is the
+    tightest regression gate.
+
+``memory_suite`` flattens the reports into ``repro.bench.record`` entries and
+couples in the roofline model (``roofline.analyze_compiled`` on the same
+compiled step), so the tracked ``BENCH_memory.json`` is the single report
+both measured and modeled numbers live in.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.record import entry
+from repro.compat import saved_residual_nbytes
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core import gmm_backend as GB
+from repro.core.checkpoint import estimate_saved_bytes
+from repro.models import transformer as T
+
+#: policy order used by suites and by the ordering assertions in tests.
+POLICY_ORDER = ("none", "paper_min", "paper", "dots", "full")
+
+
+def bench_config():
+    """The small MoE config every tracked bench number is measured on (CPU
+    container scale; the same harness takes any ``ModelConfig``)."""
+    return get_config("qwen3_moe_30b_a3b").reduced().replace(
+        name="tiny_moe", num_layers=2, d_model=64, num_heads=2,
+        num_kv_heads=2, head_dim=32, num_experts=4, top_k=2, moe_d_ff=128,
+        vocab_size=128, dtype="float32", scan_layers=True)
+
+
+def bench_dense_config():
+    """Dense SwiGLU companion config: its FFN carries the full A/B/Y_swi tag
+    set, so it is where the strict ``none < paper_min < paper < full``
+    residual ordering is measurable (the MoE expert FFN manages its own
+    residuals inside the custom VJP)."""
+    return get_config("yi_6b").reduced().replace(
+        name="tiny_dense", num_layers=2, d_model=64, num_heads=2,
+        num_kv_heads=2, head_dim=32, d_ff=128, vocab_size=128,
+        dtype="float32", scan_layers=True)
+
+
+def _loss_fn(cfg):
+    def loss(params, tokens):
+        batch = {"tokens": tokens, "labels": tokens}
+        return T.train_loss(params, batch, cfg)[0]
+    return loss
+
+
+def _abstract_args(cfg, batch: int, seq: int):
+    params = jax.eval_shape(
+        lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0))
+    tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return params, tokens
+
+
+def residual_bytes(cfg, policy: str, *, batch: int = 2, seq: int = 32) -> int:
+    """Activation bytes autodiff saves for backward under ``policy``
+    (arguments/parameters excluded)."""
+    cfg = cfg.replace(remat_policy=policy)
+    return saved_residual_nbytes(_loss_fn(cfg), *_abstract_args(cfg, batch, seq))
+
+
+def activation_memory_report(cfg, policy: str, *, backend: str | None = None,
+                             batch: int = 2, seq: int = 32,
+                             with_roofline: bool = False,
+                             with_residuals: bool = True) -> dict:
+    """Compile fwd+bwd of the train loss under (policy, backend) and account
+    its memory three ways.  Returns a flat dict of numbers (plus the roofline
+    analysis dict when requested).  ``with_residuals=False`` skips the
+    saved-residuals trace and the static estimate (they are backend-
+    independent — callers sweeping the backend axis need them only once)."""
+    resolved = GB.resolve_backend_name(backend)
+    cfg = cfg.replace(remat_policy=policy, gmm_backend=resolved)
+    args = _abstract_args(cfg, batch, seq)
+    grad = jax.grad(_loss_fn(cfg))
+    compiled = jax.jit(grad).lower(*args).compile()
+    mem = compiled.memory_analysis()
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    alias_b = getattr(mem, "alias_size_in_bytes", 0)
+    report = {
+        "config": cfg.name, "policy": policy, "backend": resolved,
+        "batch": batch, "seq": seq,
+        "arg_bytes": arg_b, "out_bytes": out_b, "temp_bytes": tmp_b,
+        "peak_bytes": arg_b + out_b + tmp_b - alias_b,
+        "residual_bytes": (residual_bytes(cfg, policy, batch=batch, seq=seq)
+                           if with_residuals else None),
+        "est_saved_bytes": (estimate_saved_bytes(cfg, policy, batch * seq)
+                            if with_residuals else None),
+    }
+    if with_roofline:
+        from repro.roofline import analyze_compiled
+        shape = InputShape("bench", seq, batch, "train")
+        report["roofline"] = analyze_compiled(compiled, cfg, shape, n_chips=1)
+    return report
+
+
+def train_step_memory_entries(cfg, *, batch: int = 2, seq: int = 32) -> list:
+    """Whole-train-step (loss + grads + AdamW) memory via the train loop's
+    ``compiled_step_memory`` hook."""
+    from repro.configs.base import TrainConfig
+    from repro.train.loop import compiled_step_memory
+    tcfg = TrainConfig(batch_size=batch, seq_len=seq)
+    mem = compiled_step_memory(cfg, tcfg)
+    prefix = f"memory/{cfg.name}/train_step"
+    return [
+        entry(f"{prefix}/temp_bytes", mem["temp_bytes"],
+              kind="temp_bytes", unit="bytes", tolerance_pct=100.0,
+              batch=batch, seq=seq),
+        entry(f"{prefix}/arg_bytes", mem["arg_bytes"],
+              kind="arg_bytes", unit="bytes", tolerance_pct=20.0,
+              batch=batch, seq=seq),
+    ]
+
+
+def memory_suite(*, small: bool = False) -> list:
+    """All memory-axis entries: (config x policy x backend) reports, the
+    roofline coupling, and the train-step axis.  The MoE config sweeps the
+    grouped-GEMM backend axis; the dense config carries the full FFN tag set
+    (and therefore the strict policy ordering)."""
+    auto = GB.resolve_backend_name(None)
+    # Entry names embed the backend, so the committed baseline must only
+    # contain names every CI leg reproduces: the portable `segment` is always
+    # swept (and is the dense config's only axis — it has no grouped GEMM);
+    # the auto-resolved backend adds entries on JAX versions that have it,
+    # which enter the gate once committed from such a version.
+    plan = [(bench_config(), list(dict.fromkeys(["segment", auto]))),
+            (bench_dense_config(), ["segment"])]
+    batch, seq = (2, 32) if small else (4, 64)
+    out = []
+    for cfg, backends in plan:
+        for policy in POLICY_ORDER:
+            for i, backend in enumerate(backends):
+                with_roofline = policy == "paper" and i == 0
+                r = activation_memory_report(cfg, policy, backend=backend,
+                                             batch=batch, seq=seq,
+                                             with_roofline=with_roofline,
+                                             with_residuals=(i == 0))
+                prefix = f"memory/{cfg.name}/{policy}/{backend}"
+                meta = {"batch": batch, "seq": seq}
+                out.append(entry(f"{prefix}/temp_bytes", r["temp_bytes"],
+                                 kind="temp_bytes", unit="bytes",
+                                 tolerance_pct=100.0, **meta))
+                out.append(entry(f"{prefix}/peak_bytes", r["peak_bytes"],
+                                 kind="peak_bytes", unit="bytes",
+                                 tolerance_pct=100.0, **meta))
+                if i == 0:  # backend-independent accountants: record once
+                    out.append(entry(
+                        f"memory/{cfg.name}/{policy}/residual_bytes",
+                        r["residual_bytes"], kind="residual_bytes",
+                        unit="bytes", tolerance_pct=20.0, **meta))
+                    if r["est_saved_bytes"] is not None:
+                        out.append(entry(
+                            f"memory/{cfg.name}/{policy}/est_saved_bytes",
+                            r["est_saved_bytes"], kind="est_saved_bytes",
+                            unit="bytes", tolerance_pct=20.0, **meta))
+                if with_roofline:
+                    from repro.roofline import bench_entries
+                    out += bench_entries(r["roofline"],
+                                         f"memory/{cfg.name}/roofline")
+    out += train_step_memory_entries(bench_config(), batch=batch, seq=seq)
+    return out

@@ -1,0 +1,167 @@
+"""Stable benchmark-record schema + the regression gate.
+
+A *record* is one JSON document (``BENCH_kernels.json`` / ``BENCH_memory.json``
+at the repo root) holding a flat list of named *entries* plus provenance
+(git sha, jax version, device backend).  Entries carry their own gating
+policy: ``tolerance_pct`` is the allowed relative increase vs the committed
+baseline before ``--check`` fails, or ``None`` for informational metrics that
+are recorded but never gated (wall-clock on shared CI runners is noise; HLO
+byte counts are not).
+
+All gated metrics are lower-is-better (seconds, bytes, flops), so the gate is
+one-sided: improvements are reported, only increases beyond tolerance fail.
+
+Schema (version 1)::
+
+    {"schema_version": 1, "suite": "kernels",
+     "provenance": {"git_sha": ..., "jax_version": ..., "backend": ...},
+     "config": {...},                      # suite parameters (e.g. small=true)
+     "entries": [{"name": ..., "kind": ..., "value": ..., "unit": ...,
+                  "tolerance_pct": ... | null, "meta": {...}}, ...]}
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+
+SCHEMA_VERSION = 1
+
+#: default tolerance used by ``--check`` for entries that predate per-entry
+#: tolerances (and by tests); the acceptance gate of the harness.
+DEFAULT_TOLERANCE_PCT = 20.0
+
+BENCH_FILES = {
+    "kernels": "BENCH_kernels.json",
+    "memory": "BENCH_memory.json",
+}
+
+
+def entry(name: str, value: float, *, kind: str, unit: str = "",
+          tolerance_pct: float | None = None, **meta) -> dict:
+    """One benchmark data point.  ``tolerance_pct=None`` means informational
+    (never gated)."""
+    return {"name": name, "kind": kind, "value": float(value), "unit": unit,
+            "tolerance_pct": tolerance_pct, "meta": meta}
+
+
+def git_sha(repo_dir: str | None = None) -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=repo_dir, capture_output=True,
+            text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return "unknown"
+
+
+def provenance() -> dict:
+    import platform
+
+    import jax
+    return {"git_sha": git_sha(os.path.dirname(os.path.dirname(
+                os.path.dirname(os.path.dirname(os.path.abspath(__file__)))))),
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "python_version": platform.python_version()}
+
+
+def make_record(suite: str, entries: list, config: dict | None = None) -> dict:
+    names = [e["name"] for e in entries]
+    dupes = {n for n in names if names.count(n) > 1}
+    if dupes:
+        raise ValueError(f"duplicate entry names in {suite!r} record: {dupes}")
+    return {"schema_version": SCHEMA_VERSION, "suite": suite,
+            "provenance": provenance(), "config": dict(config or {}),
+            "entries": entries}
+
+
+def write_record(record: dict, path: str) -> str:
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_record(path: str) -> dict:
+    with open(path) as f:
+        record = json.load(f)
+    version = record.get("schema_version")
+    if version != SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: schema_version {version!r} != {SCHEMA_VERSION} "
+            "(regenerate the baseline with `python -m repro.bench --small` "
+            "— keep the sweep size the baselines were committed with)")
+    for key in ("suite", "provenance", "entries"):
+        if key not in record:
+            raise ValueError(f"{path}: missing record field {key!r}")
+    return record
+
+
+def compare_records(current: dict, baseline: dict,
+                    default_tolerance_pct: float = DEFAULT_TOLERANCE_PCT
+                    ) -> list[dict]:
+    """Entry-by-entry comparison.  Returns one row per *gated* baseline entry
+    (``tolerance_pct`` not null): ``regressed`` is True when the current value
+    exceeds baseline by more than the tolerance, or when a gated baseline
+    entry disappeared from the current record.  Current-only entries (e.g. a
+    backend that exists only on newer JAX) are ignored — they enter the gate
+    once committed to the baseline."""
+    cur = {e["name"]: e for e in current["entries"]}
+    rows = []
+    for base in baseline["entries"]:
+        tol = base.get("tolerance_pct", default_tolerance_pct)
+        if tol is None:
+            continue
+        name = base["name"]
+        c = cur.get(name)
+        if c is None:
+            rows.append({"name": name, "baseline": base["value"],
+                         "current": None, "pct_change": None,
+                         "tolerance_pct": tol, "regressed": True,
+                         "reason": "missing from current record"})
+            continue
+        b = base["value"]
+        pct = (c["value"] - b) / b * 100.0 if b else (
+            0.0 if c["value"] == 0 else float("inf"))
+        rows.append({"name": name, "baseline": b, "current": c["value"],
+                     "pct_change": pct, "tolerance_pct": tol,
+                     "regressed": pct > tol,
+                     "reason": f"+{pct:.1f}% > {tol:.0f}%" if pct > tol else ""})
+    return rows
+
+
+def check_records(current: dict, baseline: dict,
+                  default_tolerance_pct: float = DEFAULT_TOLERANCE_PCT
+                  ) -> tuple[bool, list[str]]:
+    """Regression gate.  Returns (ok, human-readable report lines)."""
+    if current.get("suite") != baseline.get("suite"):
+        return False, [f"suite mismatch: current={current.get('suite')!r} "
+                       f"baseline={baseline.get('suite')!r}"]
+    if current.get("config") != baseline.get("config"):
+        # small vs full sweeps emit the same entry names with very different
+        # values — comparing across them would gate nothing meaningful.
+        return False, [f"config mismatch: current={current.get('config')!r} "
+                       f"baseline={baseline.get('config')!r} "
+                       "(run --check with the sweep the baseline was "
+                       "committed with)"]
+    rows = compare_records(current, baseline, default_tolerance_pct)
+    lines = []
+    ok = True
+    for r in rows:
+        if r["regressed"]:
+            ok = False
+            cur = "missing" if r["current"] is None else f"{r['current']:.4g}"
+            lines.append(f"REGRESSION {r['name']}: baseline "
+                         f"{r['baseline']:.4g} -> {cur} ({r['reason']})")
+        elif r["pct_change"] is not None and abs(r["pct_change"]) > 1e-9:
+            lines.append(f"ok {r['name']}: {r['baseline']:.4g} -> "
+                         f"{r['current']:.4g} ({r['pct_change']:+.1f}%)")
+    lines.append(f"checked {len(rows)} gated entries of "
+                 f"{len(baseline['entries'])} in suite "
+                 f"{baseline.get('suite')!r}: "
+                 + ("OK" if ok else "REGRESSED"))
+    return ok, lines

@@ -1,0 +1,177 @@
+"""Kernel/backend timing axis of the bench harness (paper §5.2 analogues).
+
+Refactored out of the old ``benchmarks/kernel_bench.py`` script into an
+importable suite: fused vs unfused SwiGLU HLO traffic, Pallas interpret-mode
+kernel wall time, the grouped-GEMM backend comparison, and one train-step
+timing probe through ``train.loop``'s ``step_hook``.
+
+Timing protocol: ``median_time_us`` — compile + ``warmup`` untimed calls,
+then the median of ``iters`` individually ``jax.block_until_ready``-fenced
+calls.  Medians, not means: a single GC pause or CI-runner hiccup must not
+move the recorded number.  Wall-clock entries are informational
+(``tolerance_pct=None``) — this container/CI measures CPU interpret paths —
+while HLO flops/bytes are deterministic and gated.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.record import entry
+
+
+def median_time_us(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time of ``fn(*args)`` in microseconds, each call fenced
+    with ``block_until_ready`` so async dispatch cannot hide work."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(samples)
+
+
+def hlo_cost(fn, *args) -> tuple[float, float]:
+    """(flops, bytes accessed) from XLA cost analysis of the jitted ``fn``."""
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(c, list):
+        c = c[0]
+    return float(c.get("flops", 0)), float(c.get("bytes accessed", 0))
+
+
+def swiglu_traffic_entries(L=4096, d=1024, h=4096, dtype=jnp.bfloat16) -> list:
+    """HLO traffic of fwd+bwd SwiGLU: naive autodiff (saves every elementwise
+    intermediate) vs the paper checkpoint policy (save A/B, recompute SiLU)."""
+    sds = jax.ShapeDtypeStruct
+    x, w1, w2 = sds((L, d), dtype), sds((d, h), dtype), sds((d, h), dtype)
+
+    def naive(x, w1, w2):
+        return (jax.nn.silu(x @ w1) * (x @ w2)).astype(jnp.float32).sum()
+
+    from repro.core.checkpoint import FFN_A, FFN_B, POLICIES, tag
+
+    def paper_ckpt(x, w1, w2):
+        def inner(x):
+            a = tag(x @ w1, FFN_A)
+            b = tag(x @ w2, FFN_B)
+            return jax.nn.silu(a) * b
+        y = jax.checkpoint(inner, policy=POLICIES["paper_min"])(x)
+        return y.astype(jnp.float32).sum()
+
+    meta = {"L": L, "d": d, "h": h}
+    out = []
+    for name, f in (("naive", naive), ("paper_ckpt", paper_ckpt)):
+        fl, by = hlo_cost(jax.grad(f, argnums=(0, 1, 2)), x, w1, w2)
+        out.append(entry(f"kernels/swiglu_traffic/{name}/flops", fl,
+                         kind="flops", unit="flop", tolerance_pct=20.0, **meta))
+        out.append(entry(f"kernels/swiglu_traffic/{name}/bytes", by,
+                         kind="bytes_accessed", unit="bytes",
+                         tolerance_pct=100.0, **meta))
+    return out
+
+
+def pallas_kernel_entries(L=1024, d=256, h=512, iters=5) -> list:
+    """Wall time of the Pallas fused-SwiGLU kernel in interpret mode
+    (correctness-path cost only — not representative of TPU speed)."""
+    from repro.kernels.fused_swiglu import fused_swiglu_fwd
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (L, d), jnp.float32)
+    w1 = jax.random.normal(key, (d, h), jnp.float32) * 0.05
+    w2 = jax.random.normal(key, (d, h), jnp.float32) * 0.05
+    us = median_time_us(fused_swiglu_fwd, x, w1, w2, warmup=1, iters=iters)
+    return [entry("kernels/pallas_fused_swiglu_interpret/time", us,
+                  kind="time_us", unit="us", L=L, d=d, h=h)]
+
+
+def gmm_backend_entries(S=2048, d=256, h=512, E=8, iters=5, *,
+                        include_pallas=False) -> list:
+    """Every available grouped-GEMM backend on one routed workload: median
+    wall time of fwd + dw plus the jitted forward's HLO flops/bytes.
+
+    ``pallas`` runs in interpret mode on CPU — wall time there measures the
+    interpreter, not the kernel, so it is opt-in."""
+    from repro.core import gmm_backend as GB
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    lhs = jax.random.normal(ks[0], (S, d), jnp.float32)
+    rhs = jax.random.normal(ks[1], (E, d, h), jnp.float32) * 0.05
+    dout = jax.random.normal(ks[2], (S, h), jnp.float32)
+    base = S // E
+    gs = jnp.asarray([base] * (E - 1) + [S - base * (E - 1)], jnp.int32)
+
+    out = []
+    meta = {"S": S, "d": d, "h": h, "E": E}
+    for name in GB.available_backends():
+        if name == "pallas" and not include_pallas:
+            continue
+
+        def fwd(lhs, rhs, gs, _name=name):
+            return GB.gmm(lhs, rhs, gs, backend=_name)
+
+        def dw(lhs, dout, gs, _name=name):
+            return GB.gmm_dw(lhs, dout, gs, backend=_name)
+
+        fl, by = hlo_cost(fwd, lhs, rhs, gs)
+        jf, jd = jax.jit(fwd), jax.jit(dw)
+        us = median_time_us(lambda: (jf(lhs, rhs, gs), jd(lhs, dout, gs)),
+                            warmup=1, iters=iters)
+        out.append(entry(f"kernels/gmm_backend/{name}/time", us,
+                         kind="time_us", unit="us", **meta))
+        out.append(entry(f"kernels/gmm_backend/{name}/flops", fl,
+                         kind="flops", unit="flop", tolerance_pct=20.0, **meta))
+        out.append(entry(f"kernels/gmm_backend/{name}/bytes", by,
+                         kind="bytes_accessed", unit="bytes",
+                         tolerance_pct=100.0, **meta))
+    return out
+
+
+def train_step_entries(steps: int = 3) -> list:
+    """Per-step wall time of the tiny-config train loop, collected through
+    ``train.loop``'s ``step_hook`` (the hook the harness regresses against)."""
+    from repro.bench.memory import bench_config
+    from repro.configs.base import TrainConfig
+    from repro.train.loop import train
+
+    cfg = bench_config()
+    tcfg = TrainConfig(total_steps=steps + 1, batch_size=2, seq_len=32,
+                       log_every=10_000)
+    times = []
+    train(cfg, tcfg, log=lambda *_: None,
+          step_hook=lambda step, m: times.append(m["step_s"]))
+    # First step includes compile; report the median of the rest.
+    us = statistics.median(times[1:]) * 1e6
+    return [entry(f"kernels/train_step/{cfg.name}/time", us,
+                  kind="time_us", unit="us", steps=steps,
+                  compile_s=times[0])]
+
+
+def kernels_suite(*, small: bool = False) -> list:
+    """All timing-axis entries.  ``small`` is the CI/test sweep."""
+    out = []
+    out += swiglu_traffic_entries(L=1024 if small else 4096)
+    out += pallas_kernel_entries(L=256 if small else 1024,
+                                 iters=3 if small else 5)
+    out += gmm_backend_entries(S=512 if small else 2048,
+                               iters=3 if small else 5,
+                               include_pallas=small)
+    out += train_step_entries()
+    return out
+
+
+def legacy_rows(entries: list) -> list:
+    """Project record entries onto the old ``(name, us, derived)`` CSV rows
+    still emitted by ``benchmarks/run.py``."""
+    rows = []
+    for e in entries:
+        us = e["value"] if e["kind"] == "time_us" else 0.0
+        derived = ";".join(f"{k}={v}" for k, v in e["meta"].items())
+        if e["kind"] != "time_us":
+            derived = f"{e['kind']}={e['value']:.4g};{derived}"
+        rows.append((e["name"].replace("/", "_"), us, derived.rstrip(";")))
+    return rows

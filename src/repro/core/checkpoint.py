@@ -22,6 +22,17 @@ QKV = "qkv"              # fused QKV projection output
 SSM_STATE = "ssm_state"  # recurrent-scan carry snapshots
 MOE_GATES = "moe_gates"  # router top-k weights
 
+# Tag sets per name-based policy.  ``repro.bench.memory`` derives its static
+# activation estimator from these, so they are data, not just policy args.
+POLICY_TAGS = {
+    "none": (),
+    # Paper policy: save the GEMM outputs (A, B, attention projections) and
+    # Y_swi (Algorithm 1 line 11); recompute all other elementwise work.
+    "paper": (FFN_A, FFN_B, FFN_YSWI, ATTN_OUT, QKV),
+    # Beyond-paper: also drop Y_swi (recompute SiLU(A)·B in backward).
+    "paper_min": (FFN_A, FFN_B, ATTN_OUT, QKV),
+}
+
 POLICIES = {
     # Save nothing; recompute the whole layer in backward (max memory saving).
     "none": cp.nothing_saveable,
@@ -29,11 +40,8 @@ POLICIES = {
     "full": cp.everything_saveable,
     # Classic: save all matmul outputs.
     "dots": cp.dots_with_no_batch_dims_saveable,
-    # Paper policy: save the GEMM outputs (A, B, attention projections) and
-    # Y_swi (Algorithm 1 line 11); recompute all other elementwise work.
-    "paper": cp.save_only_these_names(FFN_A, FFN_B, FFN_YSWI, ATTN_OUT, QKV),
-    # Beyond-paper: also drop Y_swi (recompute SiLU(A)·B in backward).
-    "paper_min": cp.save_only_these_names(FFN_A, FFN_B, ATTN_OUT, QKV),
+    "paper": cp.save_only_these_names(*POLICY_TAGS["paper"]),
+    "paper_min": cp.save_only_these_names(*POLICY_TAGS["paper_min"]),
 }
 
 
@@ -46,3 +54,41 @@ def apply_policy(fn, policy: str, prevent_cse: bool = False):
 
 def tag(x, name: str):
     return checkpoint_name(x, name)
+
+
+def tag_bytes_per_group(cfg, n_tokens: int) -> dict:
+    """Bytes of each tagged tensor per scanned layer group, from shapes alone.
+
+    Mirrors the ``tag(...)`` call sites in ``models/``: the q projection
+    (QKV), the attention output projection (ATTN_OUT), the dense-FFN GEMM
+    outputs and SwiGLU product (FFN_A/B/YSWI — the MoE expert FFN manages its
+    own residuals inside the custom VJP), and the router top-k weights
+    (MOE_GATES)."""
+    import jax.numpy as jnp
+
+    item = jnp.dtype(cfg.dtype).itemsize
+    sizes = dict.fromkeys(
+        (FFN_A, FFN_B, FFN_YSWI, ATTN_OUT, QKV, MOE_GATES), 0)
+    for kind in cfg.block_pattern:
+        has_attn = "attn" in kind or kind == "hymba"
+        if has_attn:
+            sizes[QKV] += n_tokens * cfg.num_heads * cfg.resolved_head_dim
+            sizes[ATTN_OUT] += n_tokens * cfg.d_model
+        if kind.endswith("moe"):
+            sizes[MOE_GATES] += n_tokens * cfg.top_k
+        elif has_attn:                     # dense FFN sublayer
+            n = 3 if cfg.ffn_act == "swiglu" else 1
+            for t in (FFN_A, FFN_B, FFN_YSWI)[:n]:
+                sizes[t] += n_tokens * cfg.d_ff
+    return {t: b * item for t, b in sizes.items()}
+
+
+def estimate_saved_bytes(cfg, policy: str, n_tokens: int) -> int | None:
+    """Static activation-residual estimate for a name-based policy, whole
+    stack (``num_groups`` scanned groups).  Returns ``None`` for policies not
+    expressible as tag sets (``full``, ``dots``)."""
+    if policy not in POLICY_TAGS:
+        return None
+    per_group = tag_bytes_per_group(cfg, n_tokens)
+    tags = POLICY_TAGS[policy]
+    return cfg.num_groups * sum(per_group[t] for t in tags)

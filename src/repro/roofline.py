@@ -132,3 +132,26 @@ def analyze_compiled(compiled, cfg, shape, *, n_chips: int) -> dict:
         "useful_flops_ratio": mf / max(flops * n_chips, 1.0),
         "n_chips": n_chips,
     }
+
+
+def bench_entries(analysis: dict, prefix: str) -> list:
+    """Project an ``analyze_compiled`` dict into ``repro.bench.record``
+    entries so roofline-model numbers and measured numbers land in the same
+    tracked report (``BENCH_memory.json``)."""
+    from repro.bench.record import entry
+
+    meta = {"dominant": analysis["dominant"], "n_chips": analysis["n_chips"]}
+    return [
+        entry(f"{prefix}/flops", analysis["flops_per_dev"],
+              kind="flops", unit="flop", tolerance_pct=20.0, **meta),
+        entry(f"{prefix}/hlo_bytes", analysis["hlo_bytes_per_dev"],
+              kind="bytes_accessed", unit="bytes", tolerance_pct=100.0),
+        entry(f"{prefix}/peak_bytes", analysis["peak_bytes"],
+              kind="peak_bytes", unit="bytes", tolerance_pct=100.0),
+        entry(f"{prefix}/t_compute", analysis["t_compute_s"],
+              kind="roofline_s", unit="s"),
+        entry(f"{prefix}/t_memory", analysis["t_memory_s"],
+              kind="roofline_s", unit="s"),
+        entry(f"{prefix}/t_collective", analysis["t_collective_s"],
+              kind="roofline_s", unit="s"),
+    ]

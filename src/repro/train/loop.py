@@ -62,9 +62,37 @@ def make_train_step(cfg, tcfg, *, mesh=None):
     return step_fn
 
 
+def compiled_step_memory(cfg, tcfg, *, mesh=None) -> dict:
+    """Memory/cost hook: abstractly lower + compile one train step and return
+    its XLA memory analysis (no arrays allocated, no step executed).  This is
+    the per-step memory axis the bench harness (``repro.bench.memory``)
+    regresses against."""
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
+    opt_state = jax.eval_shape(init_adamw, params)
+    sds = jax.ShapeDtypeStruct
+    tok = sds((tcfg.batch_size, tcfg.seq_len), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    step_fn = make_train_step(cfg, tcfg, mesh=mesh)
+    compiled = jax.jit(step_fn).lower(params, opt_state, batch).compile()
+    mem = compiled.memory_analysis()
+    return {
+        "arg_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "out_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        "compiled": compiled,
+    }
+
+
 def train(cfg, tcfg, *, mesh=None, params=None, log=print,
-          batch_iterator=None):
-    """End-to-end training driver.  Returns (params, opt_state, history)."""
+          batch_iterator=None, step_hook=None):
+    """End-to-end training driver.  Returns (params, opt_state, history).
+
+    ``step_hook(step, metrics)`` — if given — fires after every step with the
+    raw (device) metrics plus ``step_s``, the step's host wall time; the same
+    ``step_s`` lands in ``history`` so callers can track per-step timing
+    without wrapping the loop."""
     key = jax.random.PRNGKey(tcfg.seed)
     if params is None:
         params = T.init_params(key, cfg)
@@ -78,10 +106,16 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
     t0 = time.perf_counter()
     for step in range(tcfg.total_steps):
         batch = {k: jnp.asarray(v) for k, v in next(batch_iterator).items()}
+        ts = time.perf_counter()
         params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step_hook is not None:
+            jax.block_until_ready(metrics)
+            metrics = dict(metrics, step_s=time.perf_counter() - ts)
+            step_hook(step, metrics)
         if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step
+            m.setdefault("step_s", time.perf_counter() - ts)
             m["wall_s"] = time.perf_counter() - t0
             history.append(m)
             log(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "

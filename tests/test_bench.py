@@ -1,0 +1,133 @@
+"""``repro.bench`` harness tests: record schema round-trip, the ``--check``
+regression gate (a synthetic regressed record must fail), and a smoke run of
+the memory accountant under both the ``segment`` and auto-resolved
+grouped-GEMM backends."""
+
+import json
+
+import pytest
+
+from repro.bench import record as R
+from repro.bench.cli import main as bench_main
+from repro.core import gmm_backend as GB
+
+
+def _toy_record(**overrides):
+    entries = [
+        R.entry("toy/a/bytes", 1000.0, kind="residual_bytes", unit="bytes",
+                tolerance_pct=20.0, batch=2),
+        R.entry("toy/a/time", 123.4, kind="time_us", unit="us"),
+        R.entry("toy/b/bytes", 500.0, kind="temp_bytes", unit="bytes",
+                tolerance_pct=100.0),
+    ]
+    rec = R.make_record("kernels", entries, config={"small": True})
+    rec.update(overrides)
+    return rec
+
+
+def test_record_roundtrip(tmp_path):
+    rec = _toy_record()
+    path = R.write_record(rec, str(tmp_path / "r.json"))
+    back = R.load_record(path)
+    assert back == json.loads(json.dumps(rec))     # JSON-stable
+    assert back["schema_version"] == R.SCHEMA_VERSION
+    assert back["suite"] == "kernels"
+    for key in ("git_sha", "jax_version", "backend"):
+        assert key in back["provenance"], key
+    assert [e["name"] for e in back["entries"]] == [
+        "toy/a/bytes", "toy/a/time", "toy/b/bytes"]
+
+
+def test_record_rejects_duplicates_and_bad_schema(tmp_path):
+    with pytest.raises(ValueError, match="duplicate"):
+        R.make_record("kernels", [R.entry("x", 1, kind="k"),
+                                  R.entry("x", 2, kind="k")])
+    rec = _toy_record(schema_version=99)
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    with pytest.raises(ValueError, match="schema_version"):
+        R.load_record(path)
+
+
+def test_regression_gate_semantics():
+    base = _toy_record()
+    # identical record: clean
+    ok, _ = R.check_records(_toy_record(), base)
+    assert ok
+    # +50% on a 20%-tolerance entry: regression
+    bad = _toy_record()
+    bad["entries"][0] = dict(bad["entries"][0], value=1500.0)
+    ok, lines = R.check_records(bad, base)
+    assert not ok
+    assert any("REGRESSION toy/a/bytes" in ln for ln in lines)
+    # +50% on the 100%-tolerance entry: allowed
+    loose = _toy_record()
+    loose["entries"][2] = dict(loose["entries"][2], value=750.0)
+    ok, _ = R.check_records(loose, base)
+    assert ok
+    # wall-clock entries are never gated, even at 100x
+    noisy = _toy_record()
+    noisy["entries"][1] = dict(noisy["entries"][1], value=12340.0)
+    ok, _ = R.check_records(noisy, base)
+    assert ok
+    # a gated entry disappearing from the current record fails the gate
+    missing = _toy_record()
+    missing["entries"] = missing["entries"][1:]
+    ok, lines = R.check_records(missing, base)
+    assert not ok
+    assert any("missing" in ln for ln in lines)
+    # improvements are fine
+    better = _toy_record()
+    better["entries"][0] = dict(better["entries"][0], value=100.0)
+    ok, _ = R.check_records(better, base)
+    assert ok
+    # sweep-size mismatch is rejected, not silently compared
+    mismatch = _toy_record(config={"small": False})
+    ok, lines = R.check_records(mismatch, base)
+    assert not ok
+    assert any("config mismatch" in ln for ln in lines)
+
+
+def test_cli_check_exit_codes(tmp_path):
+    """`python -m repro.bench --check` exits nonzero when fed a record with a
+    >20% regression, zero on a clean one (the acceptance gate)."""
+    base_path = R.write_record(_toy_record(), str(tmp_path / "base.json"))
+    bad = _toy_record()
+    bad["entries"][0] = dict(bad["entries"][0], value=1300.0)   # +30% > 20%
+    bad_path = R.write_record(bad, str(tmp_path / "bad.json"))
+
+    assert bench_main(["--check", "--record", base_path,
+                       "--baseline", base_path]) == 0
+    assert bench_main(["--check", "--record", bad_path,
+                       "--baseline", base_path]) == 1
+    # missing baseline is a failure, not a silent pass
+    assert bench_main(["--check", "--record", bad_path,
+                       "--baseline-dir", str(tmp_path)]) == 1
+
+
+def test_memory_accountant_smoke_segment_and_auto():
+    """The activation-memory accountant runs on the tiny config under both
+    the portable `segment` backend and whatever auto resolves to, and its
+    three accountants agree on basic sanity."""
+    from repro.bench.memory import activation_memory_report, bench_config
+    cfg = bench_config()
+    backends = list(dict.fromkeys(["segment", GB.resolve_backend_name(None)]))
+    residuals = {}
+    for backend in backends:
+        r = activation_memory_report(cfg, "paper", backend=backend)
+        assert r["backend"] == backend
+        assert r["temp_bytes"] > 0 and r["peak_bytes"] > r["temp_bytes"]
+        assert r["residual_bytes"] > 0
+        assert r["est_saved_bytes"] is not None and r["est_saved_bytes"] > 0
+        residuals[backend] = r["residual_bytes"]
+    # autodiff's residual set is a property of the math, not the backend
+    assert len(set(residuals.values())) == 1, residuals
+
+
+def test_median_time_us_protocol():
+    import jax.numpy as jnp
+
+    from repro.bench.timing import median_time_us
+    us = median_time_us(lambda x: x * 2, jnp.ones((8,)), warmup=1, iters=3)
+    assert us > 0

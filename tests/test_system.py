@@ -30,8 +30,7 @@ def test_paper_conf_registry():
 def test_checkpoint_policy_memory_ordering():
     """More aggressive policies save fewer residual bytes:
     none <= paper_min <= paper <= full."""
-    import math
-    from jax._src.ad_checkpoint import saved_residuals
+    from repro.compat import saved_residual_nbytes
     from repro.core.checkpoint import FFN_A, FFN_B, FFN_YSWI, tag
 
     L, d, h = 256, 64, 128
@@ -50,11 +49,7 @@ def test_checkpoint_policy_memory_ordering():
     for pol in ("none", "paper_min", "paper", "full"):
         f = jax.checkpoint(layer, policy=POLICIES[pol]) \
             if pol != "full" else layer
-        res = saved_residuals(lambda x: f(x).sum(), x)
-        sizes[pol] = sum(math.prod(a.shape) * a.dtype.itemsize
-                         for a, src in res
-                         if hasattr(a, "shape")
-                         and "from the argument" not in str(src))
+        sizes[pol] = saved_residual_nbytes(lambda x: f(x).sum(), x)
     assert sizes["none"] <= sizes["paper_min"] <= sizes["paper"] \
         <= sizes["full"]
     # In this single-layer toy, partial-eval may pick an equivalent-size
@@ -66,7 +61,7 @@ def test_checkpoint_policy_memory_ordering():
 def test_memory_claim_moeblaze_vs_megablocks():
     """Paper validation at test scale: MoEBlaze saves >=1.8x activation
     memory vs the materialized baseline on a SwiGLU MoE layer."""
-    from benchmarks.paper_tables import residual_bytes
+    from repro.bench.paper_tables import residual_bytes
     conf = (256, 8, 2, 4, 512)          # d, E, k, B, S (scaled conf2)
     blaze = residual_bytes(conf, "blaze", "swiglu")
     mega = residual_bytes(conf, "megablocks", "swiglu")
@@ -78,7 +73,7 @@ def test_memory_claim_moeblaze_vs_megablocks():
 
 def test_dispatch_sortfree_faster_than_sort():
     """The paper's headline dispatch claim, on this backend."""
-    from benchmarks.paper_tables import dispatch_build_us
+    from repro.bench.paper_tables import dispatch_build_us
     conf = (512, 16, 4, 8, 1024)
     t_free = dispatch_build_us(conf, "sortfree", iters=3)
     t_sort = dispatch_build_us(conf, "sort", iters=3)
