@@ -88,18 +88,20 @@ def activation_memory_report(cfg, policy: str, *, backend: str | None = None,
     analysis dict when requested).  ``with_residuals=False`` skips the
     saved-residuals trace and the static estimate (they are backend-
     independent — callers sweeping the backend axis need them only once)."""
-    resolved = GB.resolve_backend_name(backend)
-    cfg = cfg.replace(remat_policy=policy, gmm_backend=resolved)
+    rb = GB.resolve(backend, config=cfg.gmm_backend)
+    cfg = cfg.replace(remat_policy=policy, gmm_backend=rb.name)
     args = _abstract_args(cfg, batch, seq)
     grad = jax.grad(_loss_fn(cfg))
-    compiled = jax.jit(grad).lower(*args).compile()
+    with GB.use_backend(rb.name):   # pin the trace to the stamped backend
+        compiled = jax.jit(grad).lower(*args).compile()
     mem = compiled.memory_analysis()
     arg_b = getattr(mem, "argument_size_in_bytes", 0)
     out_b = getattr(mem, "output_size_in_bytes", 0)
     tmp_b = getattr(mem, "temp_size_in_bytes", 0)
     alias_b = getattr(mem, "alias_size_in_bytes", 0)
     report = {
-        "config": cfg.name, "policy": policy, "backend": resolved,
+        "config": cfg.name, "policy": policy, "backend": rb.name,
+        "backend_source": rb.source,
         "batch": batch, "seq": seq,
         "arg_bytes": arg_b, "out_bytes": out_b, "temp_bytes": tmp_b,
         "peak_bytes": arg_b + out_b + tmp_b - alias_b,
@@ -123,13 +125,14 @@ def train_step_memory_entries(cfg, *, batch: int = 2, seq: int = 32) -> list:
     tcfg = TrainConfig(batch_size=batch, seq_len=seq)
     mem = compiled_step_memory(cfg, tcfg)
     prefix = f"memory/{cfg.name}/train_step"
+    # The step's resolved backend rides in the meta — stamped from the
+    # resolution the compiled step actually used, not from the env var.
+    meta = {"batch": batch, "seq": seq, "gmm_backend": mem["gmm_backend"]}
     return [
         entry(f"{prefix}/temp_bytes", mem["temp_bytes"],
-              kind="temp_bytes", unit="bytes", tolerance_pct=100.0,
-              batch=batch, seq=seq),
+              kind="temp_bytes", unit="bytes", tolerance_pct=100.0, **meta),
         entry(f"{prefix}/arg_bytes", mem["arg_bytes"],
-              kind="arg_bytes", unit="bytes", tolerance_pct=20.0,
-              batch=batch, seq=seq),
+              kind="arg_bytes", unit="bytes", tolerance_pct=20.0, **meta),
     ]
 
 
@@ -138,7 +141,7 @@ def memory_suite(*, small: bool = False) -> list:
     roofline coupling, and the train-step axis.  The MoE config sweeps the
     grouped-GEMM backend axis; the dense config carries the full FFN tag set
     (and therefore the strict policy ordering)."""
-    auto = GB.resolve_backend_name(None)
+    auto = GB.resolve(None).name
     # Entry names embed the backend, so the committed baseline must only
     # contain names every CI leg reproduces: the portable `segment` is always
     # swept (and is the dense config's only axis — it has no grouped GEMM);

@@ -62,10 +62,17 @@ def provenance() -> dict:
     import platform
 
     import jax
+
+    from repro.core import gmm_backend as GB
+    # The grouped-GEMM backend this run resolves by default — stamped through
+    # the resolver (context/env/auto precedence), never a raw env-var read.
+    gmm_rb = GB.resolve(None)
     return {"git_sha": git_sha(os.path.dirname(os.path.dirname(
                 os.path.dirname(os.path.dirname(os.path.abspath(__file__)))))),
             "jax_version": jax.__version__,
             "backend": jax.default_backend(),
+            "gmm_backend": gmm_rb.name,
+            "gmm_backend_source": gmm_rb.source,
             "python_version": platform.python_version()}
 
 

@@ -141,14 +141,18 @@ def train_step_entries(steps: int = 3) -> list:
     cfg = bench_config()
     tcfg = TrainConfig(total_steps=steps + 1, batch_size=2, seq_len=32,
                        log_every=10_000)
-    times = []
-    train(cfg, tcfg, log=lambda *_: None,
-          step_hook=lambda step, m: times.append(m["step_s"]))
+    times, backends = [], []
+
+    def hook(step, m):
+        times.append(m["step_s"])
+        backends.append(m["gmm_backend"])   # resolved name, not the env var
+
+    train(cfg, tcfg, log=lambda *_: None, step_hook=hook)
     # First step includes compile; report the median of the rest.
     us = statistics.median(times[1:]) * 1e6
     return [entry(f"kernels/train_step/{cfg.name}/time", us,
                   kind="time_us", unit="us", steps=steps,
-                  compile_s=times[0])]
+                  compile_s=times[0], gmm_backend=backends[-1])]
 
 
 def kernels_suite(*, small: bool = False) -> list:

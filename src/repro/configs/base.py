@@ -30,7 +30,9 @@ class ModelConfig:
     moe_impl: str = "blaze"              # blaze | blaze_pallas | megablocks | dense
     moe_parallel: str = "auto"           # auto | ep | tp (distributed mode)
     gmm_backend: str = "auto"            # grouped-GEMM backend: auto | ragged
-    # | segment | pallas (see repro.core.gmm_backend; env REPRO_GMM_BACKEND)
+    # | segment | pallas — the *config* slot of the resolution precedence
+    # (call-site arg > use_backend scope > this > $REPRO_GMM_BACKEND > auto;
+    # see repro.core.gmm_backend.resolve)
     save_yswi: bool = True               # paper-faithful Algorithm 1 residuals
     aux_loss_weight: float = 0.01
     z_loss_weight: float = 1e-3
@@ -149,6 +151,9 @@ class TrainConfig:
     batch_size: int = 8
     seq_len: int = 256
     num_microbatches: int = 1            # gradient accumulation
+    gmm_backend: str = "auto"            # grouped-GEMM backend for the train
+    # step; "auto" defers to the model config then the precedence chain
+    # (see repro.core.gmm_backend.resolve)
     seed: int = 0
     checkpoint_every: int = 0            # 0 -> disabled
     checkpoint_dir: str = "/tmp/repro_ckpt"

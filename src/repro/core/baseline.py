@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.gmm_backend import gmm
+from repro.core.gmm_backend import ResolvedBackend, gmm, resolve
 from repro.core.moe_layer import _ACTS, _silu
 from repro.core.routing import Dispatch
 
@@ -26,8 +26,12 @@ def moe_ffn_megablocks(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
                        w1: jax.Array, w3: jax.Array,
                        w2: jax.Array | None = None,
                        *, activation: str = "swiglu",
-                       backend: str | None = None) -> jax.Array:
+                       backend: str | ResolvedBackend | None = None
+                       ) -> jax.Array:
     """Materialized-dispatch baseline (plain autodiff, no smart checkpoint)."""
+    # One trace-time resolution shared by all three grouped GEMMs (and their
+    # autodiff transposes) — the precedence chain is never consulted mid-op.
+    backend = resolve(backend)
     L, k = dispatch.token_index_map.shape
     # Materialize the routed-token buffer — the (L*k, d) allocation the paper
     # eliminates (§2.1 example: ~94 GB at DeepSeek scale).

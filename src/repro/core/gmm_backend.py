@@ -23,14 +23,30 @@ instead of a hard import:
   * ``pallas``  — the ``kernels/gather_gmm.py`` work-item kernels (identity
     gather; ``interpret=True`` on CPU, real lowering on TPU).
 
-Selection precedence: explicit ``backend=`` argument > the
-``REPRO_GMM_BACKEND`` environment variable > auto (first available of
-``ragged``, ``segment``).  ``pallas`` is never auto-selected: in interpret
-mode it is orders of magnitude slower than the XLA paths and exists as an
-explicitly requested kernel-validation target.
+Selection precedence (``resolve``):
+
+  1. explicit ``backend=`` call-site argument,
+  2. the active :func:`use_backend` context,
+  3. a config field (``ModelConfig.gmm_backend`` / ``TrainConfig.gmm_backend``,
+     passed via ``resolve(..., config=...)``),
+  4. the ``REPRO_GMM_BACKEND`` environment variable,
+  5. auto (first available of ``ragged``, ``segment``).
+
+``pallas`` is never auto-selected: in interpret mode it is orders of magnitude
+slower than the XLA paths and exists as an explicitly requested
+kernel-validation target.
 
     REPRO_GMM_BACKEND=segment python -m pytest -q          # force portable
     gmm(lhs, rhs, sizes, backend="ragged")                  # force fast path
+    with use_backend("segment"):                            # scope, not env
+        y = moe_ffn_blaze(...)
+
+Resolution happens at *trace time* (inside jit it runs while the Python
+function is being traced, so the chosen backend is baked into the jaxpr) and
+is recorded in a :class:`ResolvedBackend` carrying the name plus jax-version
+provenance.  Long-lived objects (``ServeEngine``, train steps) resolve once
+at construction and hold the ``ResolvedBackend`` — mutating the environment
+afterwards cannot retarget them.
 
 The JAX-version support matrix lives in README.md; ``available_backends()``
 reports what works on the running install.
@@ -38,7 +54,10 @@ reports what works on the running install.
 
 from __future__ import annotations
 
+import contextlib
 import os
+from contextvars import ContextVar
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +66,9 @@ ENV_VAR = "REPRO_GMM_BACKEND"
 
 # Auto-selection order: fast XLA path first, portable fallback second.
 _AUTO_PRIORITY = ("ragged", "segment")
+
+#: the innermost active ``use_backend`` scope (None when outside any scope).
+_ACTIVE: ContextVar[str | None] = ContextVar("repro_gmm_backend", default=None)
 
 
 def _offsets_of(group_sizes: jax.Array) -> jax.Array:
@@ -244,18 +266,31 @@ def available_backends() -> list[str]:
     return [n for n, b in _REGISTRY.items() if b.available()]
 
 
-def resolve_backend_name(name: str | None = None) -> str:
-    """Resolve ``name`` / ``$REPRO_GMM_BACKEND`` / auto to a concrete,
-    available backend name (raises on unknown or unavailable)."""
-    if name in (None, "", "auto"):
-        name = os.environ.get(ENV_VAR, "").strip() or None
-    if name in (None, "auto"):
-        for cand in _AUTO_PRIORITY:
-            if _REGISTRY[cand].available():
-                return cand
-        raise RuntimeError(
-            "no grouped-GEMM backend available on this JAX install "
-            f"(jax {jax.__version__})")
+@dataclass(frozen=True)
+class ResolvedBackend:
+    """A concrete, validated backend choice with provenance.
+
+    ``name`` is always a registered, available backend; ``source`` records
+    which precedence slot won (``arg`` | ``context`` | ``config`` | ``env`` |
+    ``auto``); ``jax_version`` is the install the resolution was made on —
+    together they make a BENCH record / step metric self-describing in mixed
+    fleets where two hosts resolve the same config differently.  Frozen and
+    hashable, so it can ride through jit static arguments unchanged."""
+
+    name: str
+    source: str
+    jax_version: str
+
+    def __str__(self) -> str:                   # pragma: no cover - trivial
+        return self.name
+
+
+def _unset(name) -> bool:
+    """True when a precedence slot holds no explicit choice."""
+    return name in (None, "", "auto")
+
+
+def _validate(name: str) -> str:
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown gmm backend {name!r}; known: {backend_names()}")
@@ -266,19 +301,80 @@ def resolve_backend_name(name: str | None = None) -> str:
     return name
 
 
-def get_backend(name: str | None = None):
+@contextlib.contextmanager
+def use_backend(name: str | None):
+    """Scope the grouped-GEMM backend for everything traced inside the block.
+
+    Sits between the call-site argument and config fields in the precedence
+    chain, so ``with use_backend("segment"):`` retargets a whole train step /
+    engine batch without touching configs or the process environment.  The
+    name is validated eagerly (entering the scope raises on an unknown or
+    unavailable backend); ``None``/"auto" makes the scope fully transparent —
+    it neither selects nor masks an enclosing scope, so helpers can forward
+    an optional pin via ``with use_backend(maybe_none):`` safely.  Scopes
+    nest — the innermost non-transparent one wins."""
+    if _unset(name):
+        yield                       # transparent: inherit enclosing scope
+        return
+    _validate(name)
+    token = _ACTIVE.set(name)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_backend() -> str | None:
+    """The innermost ``use_backend`` scope's name, or None outside any."""
+    return _ACTIVE.get()
+
+
+def resolve(backend: str | ResolvedBackend | None = None, *,
+            config: str | None = None) -> ResolvedBackend:
+    """Resolve a backend request to a concrete :class:`ResolvedBackend`.
+
+    Precedence: ``backend`` call-site argument > active :func:`use_backend`
+    context > ``config`` (a ``gmm_backend`` config field) > the
+    ``REPRO_GMM_BACKEND`` environment variable > auto priority.  A
+    ``ResolvedBackend`` passed as ``backend`` is returned unchanged (already
+    resolved upstream — threading it is free of re-resolution surprises)."""
+    if isinstance(backend, ResolvedBackend):
+        return backend
+    chain = (("arg", backend),
+             ("context", _ACTIVE.get()),
+             ("config", config),
+             ("env", os.environ.get(ENV_VAR, "").strip() or None))
+    for source, cand in chain:
+        if not _unset(cand):
+            return ResolvedBackend(_validate(cand), source, jax.__version__)
+    for cand in _AUTO_PRIORITY:
+        if _REGISTRY[cand].available():
+            return ResolvedBackend(cand, "auto", jax.__version__)
+    raise RuntimeError(
+        "no grouped-GEMM backend available on this JAX install "
+        f"(jax {jax.__version__})")
+
+
+def resolve_backend_name(name: str | ResolvedBackend | None = None, *,
+                         config: str | None = None) -> str:
+    """Resolve to a concrete, available backend *name* (:func:`resolve`
+    without the provenance — kept for call sites that only need the str)."""
+    return resolve(name, config=config).name
+
+
+def get_backend(name: str | ResolvedBackend | None = None):
     """Return the backend object for ``name`` (or the resolved default)."""
-    return _REGISTRY[resolve_backend_name(name)]
+    return _REGISTRY[resolve(name).name]
 
 
 def gmm(lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array,
-        *, backend: str | None = None) -> jax.Array:
+        *, backend: str | ResolvedBackend | None = None) -> jax.Array:
     """Grouped matmul: rows of ``lhs`` (grouped by ``group_sizes``) times the
     matching ``rhs[g]``.  (S, d) @ (E, d, h) -> (S, h)."""
     return get_backend(backend).gmm(lhs, rhs, group_sizes)
 
 
 def gmm_dw(lhs: jax.Array, dout: jax.Array, group_sizes: jax.Array,
-           *, backend: str | None = None) -> jax.Array:
+           *, backend: str | ResolvedBackend | None = None) -> jax.Array:
     """Per-group weight gradient: (S, d), (S, h) -> (E, d, h)."""
     return get_backend(backend).gmm_dw(lhs, dout, group_sizes)

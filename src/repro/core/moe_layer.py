@@ -35,7 +35,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.gmm_backend import gmm, gmm_dw, resolve_backend_name
+from repro.core.gmm_backend import ResolvedBackend, gmm, gmm_dw, resolve
 from repro.core.routing import Dispatch
 
 __all__ = ["moe_ffn_blaze", "gmm", "gmm_dw"]
@@ -187,7 +187,7 @@ def moe_ffn_blaze(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
                   w1: jax.Array, w3: jax.Array, w2: jax.Array | None = None,
                   *, activation: str = "swiglu",
                   save_yswi: bool = True,
-                  backend: str | None = None) -> jax.Array:
+                  backend: str | ResolvedBackend | None = None) -> jax.Array:
     """MoEBlaze expert FFN.
 
     Args:
@@ -199,12 +199,14 @@ def moe_ffn_blaze(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
       w3: (E, h, d) down projection.
       activation: "swiglu" | "silu" | "relu" | "gelu".
       save_yswi: paper-faithful (True) saves Y_swi; False recomputes it.
-      backend: grouped-GEMM backend name ("ragged" | "segment" | "pallas");
-        None/"auto" honors ``REPRO_GMM_BACKEND`` then auto-detects.
+      backend: grouped-GEMM backend — a name ("ragged" | "segment" |
+        "pallas"), an upstream ``ResolvedBackend``, or None/"auto" to walk
+        the full precedence chain (``use_backend`` context, then
+        ``REPRO_GMM_BACKEND``, then auto).
     """
     # Resolve to a concrete name here so the custom-VJP static arg is a
-    # stable hashable and the env var is read at trace time.
-    backend = resolve_backend_name(backend)
+    # stable hashable and the precedence chain is walked at trace time.
+    backend = resolve(backend).name
     d = dispatch
     if activation == "swiglu":
         assert w2 is not None

@@ -17,6 +17,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.gmm_backend import ResolvedBackend, gmm, gmm_dw, resolve
 from repro.core.routing import Dispatch
 from repro.kernels.combine import combine
 from repro.kernels.dispatch import build_dispatch_pallas
@@ -100,7 +101,6 @@ def _moe_pallas_bwd(backend, res, dy):
     # Expand output grads to slots (gather through the index metadata).
     dyg = jnp.take(dy, eti, axis=0)
     # dW3 / dY_swi via grouped GEMMs (gather_gmm with identity index).
-    from repro.core.gmm_backend import gmm_dw
     dw3 = gmm_dw(y_swi * g_slot[:, None].astype(y_swi.dtype), dyg, lens,
                  backend=backend)
     dyu = gather_gmm(dyg, ident, off, jnp.swapaxes(w3, 1, 2), epilogue=False)
@@ -108,7 +108,6 @@ def _moe_pallas_bwd(backend, res, dy):
                       tim.reshape(-1)).reshape(gates.shape).astype(gates.dtype)
     dy_swi = dyu * g_slot[:, None].astype(dyu.dtype)
     # Fused SwiGLU backward (SiLU recomputed inside the kernels).
-    from repro.core.gmm_backend import gmm
     da = dy_swi * b * _dsilu(a)
     db = dy_swi * _silu(a)
     xg = jnp.take(x, eti, axis=0)
@@ -125,16 +124,17 @@ _moe_pallas.defvjp(_moe_pallas_fwd, _moe_pallas_bwd)
 
 def moe_ffn_blaze_pallas(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
                          w1: jax.Array, w3: jax.Array, w2: jax.Array,
-                         *, backend: str | None = None) -> jax.Array:
+                         *, backend: str | ResolvedBackend | None = None
+                         ) -> jax.Array:
     """Kernel-composed MoEBlaze SwiGLU expert layer (single device).
 
     ``backend`` selects the grouped-GEMM backend for the *backward* GEMMs
     (the forward runs the fused Pallas kernels by construction); resolved
-    here so the custom-VJP static arg is stable.
+    here — through the full precedence chain, at trace time — so the
+    custom-VJP static arg is stable.
     """
-    from repro.core.gmm_backend import resolve_backend_name
     d = dispatch
-    return _moe_pallas(resolve_backend_name(backend), x, w1, w2, w3,
+    return _moe_pallas(resolve(backend).name, x, w1, w2, w3,
                        gates.astype(x.dtype),
                        d.expert_token_indices, d.expert_token_offsets,
                        d.token_index_map, d.expert_lengths)

@@ -39,12 +39,17 @@ def fused_swiglu_bwd_w_ref(x, dy, a, b):
     return dw1.astype(x.dtype), dw2.astype(x.dtype)
 
 
-def gather_gmm_ref(x, idx, offsets, w1, w2=None, *, epilogue=True):
+def gather_gmm_ref(x, idx, offsets, w1, w2=None, *, epilogue=True,
+                   backend="segment"):
     """Gather rows then grouped matmul (materialized — the thing the kernel
-    avoids), as the correctness oracle.  Uses the ``segment`` gmm backend:
-    the pure-jnp rendering that exists on every supported JAX."""
+    avoids), as the correctness oracle.  ``backend`` defaults to the pinned
+    ``segment`` backend — the pure-jnp rendering that exists on every
+    supported JAX — deliberately *not* the ambient precedence chain: an
+    oracle must not move when ``REPRO_GMM_BACKEND`` or a ``use_backend``
+    scope changes mid-process.  Pass an explicit name/``ResolvedBackend`` to
+    rebase the oracle."""
     from repro.core.gmm_backend import get_backend
-    seg = get_backend("segment")
+    seg = get_backend(backend)
     xg = jnp.take(x, idx, axis=0).astype(jnp.float32)
     lens = jnp.diff(offsets)
     a = seg.gmm(xg, w1.astype(jnp.float32), lens)

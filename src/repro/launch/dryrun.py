@@ -190,13 +190,15 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     probes (1 and 2 pattern-groups) and extrapolated linearly:
     ``full = B + (G-1)·(C-B)`` — exact for homogeneous layer stacks.
     """
-    from repro.core.gmm_backend import resolve_backend_name
+    from repro.core.gmm_backend import resolve
     mesh = make_production_mesh(multi_pod=multi_pod)
     rec = {"arch": arch, "shape": shape_name,
-           "mesh": "2x16x16" if multi_pod else "16x16",
-           "gmm_backend": resolve_backend_name()}
+           "mesh": "2x16x16" if multi_pod else "16x16"}
     out, skip, cfg = _compile_once(arch, shape_name, mesh, cfg_overrides,
                                    microbatches=microbatches)
+    # Stamp the backend the lowering actually resolved (cfg at the config
+    # slot, use_backend scope above it) — not a re-read of the env var.
+    rec["gmm_backend"] = resolve(None, config=cfg.gmm_backend).name
     if skip:
         rec["status"] = f"SKIP({skip})"
         return rec
@@ -295,9 +297,14 @@ def main(argv=None):
                          "(ragged | segment | pallas; default auto)")
     args = ap.parse_args(argv)
     overrides = json.loads(args.override) if args.override else None
-    if args.gmm_backend:
-        from repro.core.gmm_backend import ENV_VAR, resolve_backend_name
-        os.environ[ENV_VAR] = resolve_backend_name(args.gmm_backend)
+    # --gmm-backend pins via a use_backend scope around the whole run — a
+    # process-local, exception-safe pin (the old os.environ mutation leaked
+    # into anything else alive in the process).
+    import contextlib
+
+    from repro.core.gmm_backend import use_backend
+    backend_scope = (use_backend(args.gmm_backend) if args.gmm_backend
+                     else contextlib.nullcontext())
 
     pairs = []
     if args.all:
@@ -309,25 +316,26 @@ def main(argv=None):
         pairs.append((args.arch, args.shape))
 
     ok = True
-    for arch, shape in pairs:
-        try:
-            rec = run_one(arch, shape, multi_pod=args.multi_pod,
-                          cfg_overrides=overrides,
-                          microbatches=args.microbatches,
-                          cost_probe=not args.no_probe)
-            if args.tag:
-                rec["tag"] = args.tag
-        except Exception as e:  # noqa: BLE001 — report and continue
-            rec = {"arch": arch, "shape": shape,
-                   "mesh": "2x16x16" if args.multi_pod else "16x16",
-                   "status": f"FAIL({type(e).__name__}: {e})"}
-            ok = False
-            print(f"[{arch} x {shape}] FAILED: {e}", file=sys.stderr)
-        if args.out:
-            with open(args.out, "a") as f:
-                f.write(json.dumps(rec) + "\n")
-        else:
-            print(json.dumps(rec))
+    with backend_scope:
+        for arch, shape in pairs:
+            try:
+                rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                              cfg_overrides=overrides,
+                              microbatches=args.microbatches,
+                              cost_probe=not args.no_probe)
+                if args.tag:
+                    rec["tag"] = args.tag
+            except Exception as e:  # noqa: BLE001 — report and continue
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if args.multi_pod else "16x16",
+                       "status": f"FAIL({type(e).__name__}: {e})"}
+                ok = False
+                print(f"[{arch} x {shape}] FAILED: {e}", file=sys.stderr)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+            else:
+                print(json.dumps(rec))
     return 0 if ok else 1
 
 

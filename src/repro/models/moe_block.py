@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import gmm_backend as GB
 from repro.core import routing
 from repro.core.baseline import moe_ffn_dense, moe_ffn_megablocks
 from repro.core.checkpoint import MOE_GATES, tag
@@ -81,19 +82,23 @@ def _moe_local(xf: jax.Array, p: dict, cfg):
         else:
             disp = routing.build_dispatch(g.topk_experts, E)
         gates = tag(g.topk_weights.astype(xf.dtype), MOE_GATES)
+        # cfg.gmm_backend enters the precedence chain at the *config* slot:
+        # an explicit call-site choice or an active use_backend() scope wins,
+        # env/auto fill in when the config says "auto".
+        rb = GB.resolve(None, config=cfg.gmm_backend)
         if cfg.moe_impl == "megablocks":
             y = moe_ffn_megablocks(xf, gates, disp, p["w1"], p["w3"],
                                    p.get("w2"), activation=cfg.ffn_act,
-                                   backend=cfg.gmm_backend)
+                                   backend=rb)
         elif cfg.moe_impl == "blaze_pallas":
             from repro.kernels.ops import moe_ffn_blaze_pallas
             y = moe_ffn_blaze_pallas(xf, gates, disp, p["w1"], p["w3"],
-                                     p["w2"], backend=cfg.gmm_backend)
+                                     p["w2"], backend=rb)
         else:
             y = moe_ffn_blaze(xf, gates, disp, p["w1"], p["w3"], p.get("w2"),
                               activation=cfg.ffn_act,
                               save_yswi=cfg.save_yswi,
-                              backend=cfg.gmm_backend)
+                              backend=rb)
     aux = (cfg.aux_loss_weight *
            routing.load_balance_loss(g.router_probs, g.topk_experts, E)
            + cfg.z_loss_weight * routing.router_z_loss(g.logits))

@@ -1,9 +1,29 @@
 """Batched serving engine: continuous-batching style decode over a fixed
 slot pool, with prefill via the full forward and jitted single-token steps.
 
-This is deliberately simple but real: requests enter a queue, get assigned
-slots, share one jitted decode step (cache updates are functional), and leave
-when they emit EOS or hit ``max_new_tokens``.
+This is deliberately simple but real: requests enter a queue (``enqueue`` /
+``run``) or come as a batch (``generate``), get assigned slots, share jitted
+single-token decode steps (cache updates are functional), and leave when they
+emit EOS or hit ``max_new_tokens``.
+
+Grouped-GEMM backend selection is context-scoped (DESIGN: mixed fleets share
+one config while each host/engine picks its fastest available backend):
+
+* the engine resolves its default backend **once, at construction** — via
+  ``repro.core.gmm_backend.resolve`` with the engine's ``gmm_backend``
+  argument at the call-site slot and ``cfg.gmm_backend`` at the config slot —
+  and holds the ``ResolvedBackend``.  Mutating ``REPRO_GMM_BACKEND``
+  afterwards cannot retarget a constructed engine, and two engines in one
+  process can run different backends over the same config;
+* each ``Request`` may carry its own ``gmm_backend`` override, validated at
+  enqueue time (an unknown name raises immediately, never mid-generate);
+* ``generate`` resolves per batch slot and groups slots by resolved backend,
+  so one batch can mix requests pinned to different backends.
+
+Decode steps are jitted per backend name (separate function objects keep the
+jit caches apart) with the concrete name baked into the config, and every
+call runs inside ``use_backend`` so an ambient scope at first-trace time
+cannot leak into the cached computation.
 """
 
 from __future__ import annotations
@@ -14,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import gmm_backend as GB
 from repro.models import transformer as T
 
 
@@ -22,56 +43,118 @@ class Request:
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 32
     eos_id: int = 2
+    gmm_backend: str | None = None  # per-request override of the engine default
     out_tokens: list = field(default_factory=list)
     done: bool = False
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, batch_slots: int = 4,
-                 capacity: int = 512, greedy: bool = True, seed: int = 0):
-        self.cfg = cfg
+                 capacity: int = 512, greedy: bool = True, seed: int = 0,
+                 gmm_backend: str | None = None):
+        # Snapshot the backend resolution at construction: precedence is the
+        # explicit engine argument > active use_backend scope >
+        # cfg.gmm_backend > env > auto, frozen into a ResolvedBackend.
+        self.backend = GB.resolve(gmm_backend, config=cfg.gmm_backend)
+        self.cfg = cfg.replace(gmm_backend=self.backend.name)
         self.params = params
         self.slots = batch_slots
         self.capacity = capacity
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(
-            lambda p, c, tok, pos: T.decode_step(
-                p, c, {"tokens": tok}, pos, cfg),
-            donate_argnums=(1,))   # cache updated in place
+        self.pending: list[Request] = []
+        self._decode_fns: dict[str, object] = {}
 
-    def _prefill(self, prompts: np.ndarray):
+    def _decode_for(self, backend_name: str):
+        """The jitted single-token decode step specialized to one backend.
+        One function object per backend keeps their jit caches separate."""
+        fn = self._decode_fns.get(backend_name)
+        if fn is None:
+            cfg = self.cfg.replace(gmm_backend=backend_name)
+            fn = jax.jit(
+                lambda p, c, tok, pos: T.decode_step(
+                    p, c, {"tokens": tok}, pos, cfg),
+                donate_argnums=(1,))   # cache updated in place
+            self._decode_fns[backend_name] = fn
+        return fn
+
+    def resolve_request(self, request: Request) -> GB.ResolvedBackend:
+        """The backend a request will decode with: its own override at the
+        call-site slot, falling back to the engine's construction-time
+        snapshot.  Raises on unknown/unavailable names."""
+        if request.gmm_backend in (None, "", "auto"):
+            return self.backend
+        return GB.resolve(request.gmm_backend, config=self.cfg.gmm_backend)
+
+    # -- queue API ----------------------------------------------------------
+
+    def enqueue(self, request: Request) -> Request:
+        """Admit a request to the pending queue.  Backend validation happens
+        HERE — an unknown or unavailable ``gmm_backend`` raises at enqueue,
+        never mid-generate with other requests' tokens in flight."""
+        self.resolve_request(request)
+        self.pending.append(request)
+        return request
+
+    def run(self) -> list[Request]:
+        """Drain the pending queue in slot-sized batches."""
+        done: list[Request] = []
+        while self.pending:
+            batch = self.pending[:self.slots]
+            del self.pending[:self.slots]
+            done.extend(self.generate(batch))
+        return done
+
+    # -- batched generation -------------------------------------------------
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        assert len(requests) <= self.slots
+        # Resolve every slot up front (raises before any decode work), then
+        # group slots by resolved backend — one batch may mix overrides.
+        resolved = [self.resolve_request(r) for r in requests]
+        groups: dict[str, list[int]] = {}
+        for i, rb in enumerate(resolved):
+            groups.setdefault(rb.name, []).append(i)
+        for name, idxs in groups.items():
+            self._generate_group([requests[i] for i in idxs], name)
+        return requests
+
+    def _prefill(self, prompts: np.ndarray, backend_name: str):
         """Sequential cache fill via the decode step (teacher-forcing each
         prompt token).  Prompts are right-aligned to a common length."""
         B, S = prompts.shape
         cache = T.init_cache(self.cfg, B, self.capacity)
+        decode = self._decode_for(backend_name)
         logits = None
         for t in range(S):
-            logits, cache = self._decode(
+            logits, cache = decode(
                 self.params, cache, jnp.asarray(prompts[:, t:t + 1]),
                 jnp.array(t))
         return logits, cache, S
 
-    def generate(self, requests: list[Request]) -> list[Request]:
-        assert len(requests) <= self.slots
+    def _generate_group(self, requests: list[Request], backend_name: str):
+        """Greedy-decode one group of requests that share a backend."""
         S = max(r.prompt.size for r in requests)
         prompts = np.zeros((len(requests), S), np.int32)
         for i, r in enumerate(requests):
             prompts[i, S - r.prompt.size:] = r.prompt     # left-pad
-        logits, cache, pos = self._prefill(prompts)
-        max_new = max(r.max_new_tokens for r in requests)
-        for _ in range(max_new):
-            nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-            for i, r in enumerate(requests):
-                if not r.done and len(r.out_tokens) < r.max_new_tokens:
-                    r.out_tokens.append(int(nxt[i]))
-                    if nxt[i] == r.eos_id:
-                        r.done = True
-            if all(r.done or len(r.out_tokens) >= r.max_new_tokens
-                   for r in requests):
-                break
-            logits, cache = self._decode(
-                self.params, cache, jnp.asarray(nxt[:, None]),
-                jnp.array(pos))
-            pos += 1
-        return requests
+        decode = self._decode_for(backend_name)
+        # The use_backend scope pins trace-time resolution to this group's
+        # backend even if the caller holds an ambient scope of their own.
+        with GB.use_backend(backend_name):
+            logits, cache, pos = self._prefill(prompts, backend_name)
+            max_new = max(r.max_new_tokens for r in requests)
+            for _ in range(max_new):
+                nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+                for i, r in enumerate(requests):
+                    if not r.done and len(r.out_tokens) < r.max_new_tokens:
+                        r.out_tokens.append(int(nxt[i]))
+                        if nxt[i] == r.eos_id:
+                            r.done = True
+                if all(r.done or len(r.out_tokens) >= r.max_new_tokens
+                       for r in requests):
+                    break
+                logits, cache = decode(
+                    self.params, cache, jnp.asarray(nxt[:, None]),
+                    jnp.array(pos))
+                pos += 1

@@ -1,6 +1,14 @@
 """Training loop: jitted train step (loss -> grads -> clip -> AdamW),
 metrics, periodic checkpointing.  Works single-device (examples, smoke) and
-under a mesh (launch/train.py passes shardings)."""
+under a mesh (launch/train.py passes shardings).
+
+Grouped-GEMM backend selection is context-scoped: ``make_train_step``
+resolves once at construction (``tcfg.gmm_backend`` over ``cfg.gmm_backend``
+at the config slot of ``repro.core.gmm_backend.resolve``) and bakes the
+concrete name into the step — mutating ``REPRO_GMM_BACKEND`` afterwards
+cannot retarget an already-made step.  ``train`` re-resolves **per step**, so
+an ambient ``use_backend`` scope entered mid-run (e.g. from a ``step_hook``)
+flips the very next step; steps are jitted per backend name and cached."""
 
 from __future__ import annotations
 
@@ -9,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import gmm_backend as GB
 from repro.data.pipeline import make_batch_iterator
 from repro.models import transformer as T
 from repro.train import checkpointing
@@ -17,12 +26,28 @@ from repro.train.optimizer import (AdamWState, adamw_update,
                                    init_adamw)
 
 
-def make_train_step(cfg, tcfg, *, mesh=None):
+def _config_backend(cfg, tcfg) -> str:
+    """The config-precedence slot for the train path: the train config's
+    choice wins over the model config's (more specific beats more general)."""
+    if tcfg.gmm_backend not in (None, "", "auto"):
+        return tcfg.gmm_backend
+    return cfg.gmm_backend
+
+
+def make_train_step(cfg, tcfg, *, mesh=None, backend=None):
     """Returns ``step_fn(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    The grouped-GEMM backend is resolved HERE, once: ``backend`` (call-site)
+    > active ``use_backend`` scope > ``tcfg.gmm_backend`` > ``cfg.gmm_backend``
+    > env > auto.  The resolution is exposed as ``step_fn.resolved_backend``
+    (a ``ResolvedBackend``) and baked into the traced config, so the step is
+    immune to later environment mutation.
 
     With ``tcfg.num_microbatches > 1`` the global batch is split along its
     leading axis and gradients are accumulated in f32 across a ``lax.scan``
     (gradient accumulation — bounds activation memory to one microbatch)."""
+    resolved = GB.resolve(backend, config=_config_backend(cfg, tcfg))
+    cfg = cfg.replace(gmm_backend=resolved.name)
 
     def grads_of(params, batch):
         return jax.value_and_grad(
@@ -49,31 +74,39 @@ def make_train_step(cfg, tcfg, *, mesh=None):
                 jax.tree.map(lambda m: m.mean(), mets)), grads
 
     def step_fn(params, opt_state: AdamWState, batch):
-        (loss, metrics), grads = accumulate(params, batch)
-        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
-        lr = cosine_schedule(opt_state.step, peak_lr=tcfg.learning_rate,
-                             warmup=tcfg.warmup_steps, total=tcfg.total_steps)
-        params, opt_state = adamw_update(
-            grads, opt_state, params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
-            eps=tcfg.eps, weight_decay=tcfg.weight_decay)
-        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
-        return params, opt_state, metrics
+        # Pin trace-time resolution to the construction-time snapshot: an
+        # ambient use_backend scope active when jit first traces this step
+        # must not outrank the backend this step was made with (the scope is
+        # a trace-time no-op once compiled).
+        with GB.use_backend(resolved.name):
+            (loss, metrics), grads = accumulate(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+            lr = cosine_schedule(
+                opt_state.step, peak_lr=tcfg.learning_rate,
+                warmup=tcfg.warmup_steps, total=tcfg.total_steps)
+            params, opt_state = adamw_update(
+                grads, opt_state, params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+                eps=tcfg.eps, weight_decay=tcfg.weight_decay)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+            return params, opt_state, metrics
 
+    step_fn.resolved_backend = resolved
     return step_fn
 
 
-def compiled_step_memory(cfg, tcfg, *, mesh=None) -> dict:
+def compiled_step_memory(cfg, tcfg, *, mesh=None, backend=None) -> dict:
     """Memory/cost hook: abstractly lower + compile one train step and return
     its XLA memory analysis (no arrays allocated, no step executed).  This is
     the per-step memory axis the bench harness (``repro.bench.memory``)
-    regresses against."""
+    regresses against.  ``gmm_backend`` in the result is the step's resolved
+    backend name — stamped from the resolution, not re-read from the env."""
     key = jax.random.PRNGKey(tcfg.seed)
     params = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
     opt_state = jax.eval_shape(init_adamw, params)
     sds = jax.ShapeDtypeStruct
     tok = sds((tcfg.batch_size, tcfg.seq_len), jnp.int32)
     batch = {"tokens": tok, "labels": tok}
-    step_fn = make_train_step(cfg, tcfg, mesh=mesh)
+    step_fn = make_train_step(cfg, tcfg, mesh=mesh, backend=backend)
     compiled = jax.jit(step_fn).lower(params, opt_state, batch).compile()
     mem = compiled.memory_analysis()
     return {
@@ -81,6 +114,7 @@ def compiled_step_memory(cfg, tcfg, *, mesh=None) -> dict:
         "out_bytes": getattr(mem, "output_size_in_bytes", 0),
         "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
         "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        "gmm_backend": step_fn.resolved_backend.name,
         "compiled": compiled,
     }
 
@@ -90,14 +124,29 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
     """End-to-end training driver.  Returns (params, opt_state, history).
 
     ``step_hook(step, metrics)`` — if given — fires after every step with the
-    raw (device) metrics plus ``step_s``, the step's host wall time; the same
-    ``step_s`` lands in ``history`` so callers can track per-step timing
-    without wrapping the loop."""
+    raw (device) metrics plus ``step_s`` (the step's host wall time) and
+    ``gmm_backend`` (the step's resolved grouped-GEMM backend name); the same
+    fields land in ``history`` so callers can track per-step timing and
+    backend provenance without wrapping the loop.
+
+    The backend is re-resolved at the top of every step: entering a
+    ``use_backend`` scope between steps (e.g. inside ``step_hook``) retargets
+    the next step — jitted steps are cached per backend name, so flipping
+    back and forth does not recompile."""
     key = jax.random.PRNGKey(tcfg.seed)
     if params is None:
         params = T.init_params(key, cfg)
     opt_state = init_adamw(params)
-    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh=mesh), donate_argnums=(0, 1))
+    step_fns: dict[str, object] = {}
+
+    def step_fn_for(name: str):
+        fn = step_fns.get(name)
+        if fn is None:
+            fn = jax.jit(make_train_step(cfg, tcfg, mesh=mesh, backend=name),
+                         donate_argnums=(0, 1))
+            step_fns[name] = fn
+        return fn
+
     if batch_iterator is None:
         batch_iterator = make_batch_iterator(
             cfg.vocab_size, tcfg.seq_len, tcfg.batch_size, tcfg.seed)
@@ -106,17 +155,25 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
     t0 = time.perf_counter()
     for step in range(tcfg.total_steps):
         batch = {k: jnp.asarray(v) for k, v in next(batch_iterator).items()}
+        resolved = GB.resolve(None, config=_config_backend(cfg, tcfg))
+        step_fn = step_fn_for(resolved.name)
         ts = time.perf_counter()
+        # (No scope needed here: the backend is pinned at the arg slot via
+        # make_train_step(backend=...) and again inside step_fn's own
+        # trace-time use_backend scope.)
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         if step_hook is not None:
             jax.block_until_ready(metrics)
-            metrics = dict(metrics, step_s=time.perf_counter() - ts)
+            metrics = dict(metrics, step_s=time.perf_counter() - ts,
+                           gmm_backend=resolved.name)
             step_hook(step, metrics)
         if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
+            m = {k: float(v) for k, v in metrics.items()
+                 if not isinstance(v, str)}
             m["step"] = step
             m.setdefault("step_s", time.perf_counter() - ts)
             m["wall_s"] = time.perf_counter() - t0
+            m["gmm_backend"] = resolved.name
             history.append(m)
             log(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
                 f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "

@@ -1,0 +1,247 @@
+"""Resolution-subsystem tests: the precedence chain (call-site arg >
+``use_backend`` context > config field > ``$REPRO_GMM_BACKEND`` > auto),
+``ResolvedBackend`` provenance, and the mid-process environment-mutation
+regression — an already-constructed ``ServeEngine`` / train step resolved its
+backend once, at construction, and NOTHING that happens to the env var
+afterwards may retarget it (the latent bug: ``ops.py``/``ref.py`` used to
+consult ``os.environ`` at call time, so a mid-process mutation silently
+flipped backends under live objects)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.core import gmm_backend as GB
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+from repro.train.loop import make_train_step
+
+MOE_CFG = get_config("qwen3_moe_30b_a3b").reduced().replace(
+    num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+    num_experts=4, top_k=2, moe_d_ff=64, vocab_size=64, dtype="float32",
+    attn_chunk=16)
+
+AUTO = GB.resolve(None).name
+
+
+# ---------------------------------------------------------------------------
+# Precedence chain
+# ---------------------------------------------------------------------------
+
+
+def test_precedence_arg_beats_everything(monkeypatch):
+    monkeypatch.setenv(GB.ENV_VAR, "pallas")
+    with GB.use_backend("pallas"):
+        rb = GB.resolve("segment", config="pallas")
+    assert (rb.name, rb.source) == ("segment", "arg")
+
+
+def test_precedence_context_beats_config_and_env(monkeypatch):
+    monkeypatch.setenv(GB.ENV_VAR, "pallas")
+    with GB.use_backend("segment"):
+        rb = GB.resolve(None, config="pallas")
+    assert (rb.name, rb.source) == ("segment", "context")
+
+
+def test_precedence_config_beats_env(monkeypatch):
+    monkeypatch.setenv(GB.ENV_VAR, "pallas")
+    rb = GB.resolve(None, config="segment")
+    assert (rb.name, rb.source) == ("segment", "config")
+
+
+def test_precedence_env_beats_auto(monkeypatch):
+    monkeypatch.setenv(GB.ENV_VAR, "pallas")
+    rb = GB.resolve(None)
+    assert (rb.name, rb.source) == ("pallas", "env")
+    monkeypatch.delenv(GB.ENV_VAR)
+    assert GB.resolve(None).source == "auto"
+
+
+def test_auto_config_is_transparent(monkeypatch):
+    """"auto"/""/None at any slot falls through to the next one."""
+    monkeypatch.delenv(GB.ENV_VAR, raising=False)   # empty the env slot too
+    assert GB.resolve("auto", config="auto").source == "auto"
+    with GB.use_backend("auto"):          # transparent scope
+        assert GB.resolve(None).source == "auto"
+    with GB.use_backend(None):
+        assert GB.resolve(None).source == "auto"
+    # Regression: a transparent scope must not MASK an enclosing pin — a
+    # helper forwarding `with use_backend(maybe_none):` keeps its caller's.
+    with GB.use_backend("segment"):
+        with GB.use_backend(None):
+            assert GB.resolve(None).name == "segment"
+        with GB.use_backend("auto"):
+            assert GB.resolve(None).source == "context"
+
+
+def test_nested_scopes_innermost_wins():
+    with GB.use_backend("segment"):
+        with GB.use_backend("pallas"):
+            assert GB.resolve(None).name == "pallas"
+        assert GB.resolve(None).name == "segment"
+    assert GB.active_backend() is None
+
+
+def test_use_backend_validates_eagerly():
+    with pytest.raises(ValueError, match="unknown gmm backend"):
+        with GB.use_backend("cuda"):
+            pytest.fail("scope must not be entered")  # pragma: no cover
+    assert GB.active_backend() is None                # nothing leaked
+
+
+def test_resolved_backend_provenance_and_passthrough():
+    rb = GB.resolve("segment")
+    assert rb.jax_version == jax.__version__
+    assert str(rb) == "segment"
+    assert GB.resolve(rb) is rb                       # no re-resolution
+    assert GB.resolve_backend_name(rb) == "segment"
+    assert GB.get_backend(rb).name == "segment"
+    # frozen + hashable: usable as a jit static argument / dict key
+    assert {rb: 1}[GB.resolve(rb)] == 1
+    with pytest.raises(AttributeError):
+        rb.name = "pallas"
+
+
+def test_resolution_is_trace_time_inside_jit():
+    """A use_backend scope active while a jit traces is baked into the
+    computation; calling the compiled function outside the scope does not
+    re-resolve."""
+    from repro.core.moe_layer import moe_ffn_blaze
+    from repro.core.routing import build_dispatch, top_k_gating
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (16, 8), jnp.float32)
+    wg = jax.random.normal(ks[1], (8, 4)) * 0.1
+    w1 = jax.random.normal(ks[2], (4, 8, 16)) * 0.1
+    w2 = jax.random.normal(ks[3], (4, 8, 16)) * 0.1
+    w3 = jax.random.normal(ks[4], (4, 16, 8)) * 0.1
+    g = top_k_gating(x, wg, 2)
+    disp = build_dispatch(g.topk_experts, 4)
+    gates = g.topk_weights.astype(x.dtype)
+
+    fn = jax.jit(lambda x: moe_ffn_blaze(x, gates, disp, w1, w3, w2))
+    with GB.use_backend("segment"):
+        y_in = fn(x)                                  # traced under the scope
+    y_out = fn(x)                                     # cached — same program
+    np.testing.assert_array_equal(np.asarray(y_in), np.asarray(y_out))
+
+
+# ---------------------------------------------------------------------------
+# Mid-process env mutation cannot retarget constructed objects (regression)
+# ---------------------------------------------------------------------------
+
+
+def _tokens(eng, seed=0):
+    req = Request(prompt=np.array([1, 2, 3], np.int32), max_new_tokens=4)
+    return tuple(eng.generate([req])[0].out_tokens)
+
+
+def test_env_mutation_cannot_retarget_constructed_engine(monkeypatch):
+    params = T.init_params(jax.random.PRNGKey(0), MOE_CFG)
+    eng = ServeEngine(MOE_CFG, params, batch_slots=1, capacity=16)
+    assert eng.backend.name == AUTO
+    before = _tokens(eng)
+
+    # A *valid but different* backend in the env: the engine's snapshot and
+    # its tokens must not move.
+    monkeypatch.setenv(GB.ENV_VAR, "pallas")
+    assert eng.backend.name == AUTO
+    assert _tokens(eng) == before
+
+    # An *invalid* value: if anything in the hot path re-read the env var it
+    # would raise — generation must stay oblivious.
+    monkeypatch.setenv(GB.ENV_VAR, "cuda")
+    assert _tokens(eng) == before
+
+
+def test_env_mutation_before_first_trace_does_not_leak(monkeypatch):
+    """The engine resolves at construction; even when the first jit trace
+    happens AFTER the env var was mutated, the construction-time snapshot
+    (not the env) is what gets traced."""
+    params = T.init_params(jax.random.PRNGKey(0), MOE_CFG)
+    eng_ref = ServeEngine(MOE_CFG, params, batch_slots=1, capacity=16)
+    before = _tokens(eng_ref)                         # traced under clean env
+
+    eng = ServeEngine(MOE_CFG, params, batch_slots=1, capacity=16)
+    monkeypatch.setenv(GB.ENV_VAR, "cuda")            # would raise if read
+    assert _tokens(eng) == before                     # first trace is here
+
+
+def test_env_mutation_cannot_retarget_constructed_step(monkeypatch):
+    tcfg = TrainConfig(batch_size=2, seq_len=16, num_microbatches=1)
+    step = make_train_step(MOE_CFG, tcfg)
+    assert step.resolved_backend.name == AUTO
+
+    params = T.init_params(jax.random.PRNGKey(0), MOE_CFG)
+    from repro.train.optimizer import init_adamw
+    opt = init_adamw(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              MOE_CFG.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    monkeypatch.setenv(GB.ENV_VAR, "cuda")            # would raise if read
+    # The step was made before the mutation; tracing it now must use the
+    # construction-time resolution, not the (invalid) env value.
+    p2, _, metrics = jax.jit(step)(params, opt, batch)
+    assert step.resolved_backend.name == AUTO
+    assert np.isfinite(float(metrics["loss"]))
+
+    # Parity with a clean-env step pinned to the SAME backend (under the
+    # env-slot CI leg, a plain auto step2 could resolve differently —
+    # e.g. ragged on latest JAX — and exact param equality across distinct
+    # backends does not hold).
+    monkeypatch.delenv(GB.ENV_VAR)
+    step2 = make_train_step(MOE_CFG, tcfg,
+                            backend=step.resolved_backend.name)
+    p2b, _, m2 = jax.jit(step2)(params, opt, batch)
+    np.testing.assert_allclose(float(metrics["loss"]), float(m2["loss"]),
+                               rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p2b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ambient_scope_cannot_retarget_constructed_step(monkeypatch):
+    """Regression: a use_backend scope active when jit FIRST TRACES an
+    already-made step must not outrank the step's construction-time
+    resolution — step_fn pins its own scope at trace time, so the program
+    that compiles matches what ``step_fn.resolved_backend`` (and BENCH
+    provenance) reports."""
+    tcfg = TrainConfig(batch_size=2, seq_len=8)
+    step = make_train_step(MOE_CFG, tcfg, backend="segment")
+
+    seen = []
+    orig = GB.resolve
+
+    def spy(backend=None, *, config=None):
+        rb = orig(backend, config=config)
+        seen.append(rb.name)
+        return rb
+
+    monkeypatch.setattr(GB, "resolve", spy)
+    params = T.init_params(jax.random.PRNGKey(0), MOE_CFG)
+    from repro.train.optimizer import init_adamw
+    opt = jax.eval_shape(init_adamw, params)
+    pshapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    toks = jax.ShapeDtypeStruct((2, 8), jnp.int32)
+    with GB.use_backend("pallas"):        # hostile ambient scope
+        jax.jit(step).lower(pshapes, opt, {"tokens": toks, "labels": toks})
+    assert seen and set(seen) == {"segment"}
+
+
+def test_make_train_step_config_slots():
+    """tcfg.gmm_backend wins over cfg.gmm_backend at the config slot; the
+    explicit backend= argument wins over both."""
+    tcfg = TrainConfig(batch_size=2, seq_len=8, gmm_backend="segment")
+    step = make_train_step(MOE_CFG.replace(gmm_backend="pallas"), tcfg)
+    assert step.resolved_backend.name == "segment"
+    assert step.resolved_backend.source == "config"
+
+    step = make_train_step(MOE_CFG, TrainConfig(batch_size=2, seq_len=8),
+                           backend="segment")
+    assert step.resolved_backend.source == "arg"
+
+    with pytest.raises(ValueError, match="unknown gmm backend"):
+        make_train_step(MOE_CFG, tcfg, backend="cuda")

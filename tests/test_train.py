@@ -101,6 +101,42 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), b)
 
 
+def test_step_hook_reports_backend_and_context_flips_one_step():
+    """``step_hook`` metrics carry the step's resolved grouped-GEMM backend,
+    and entering a ``use_backend("segment")`` scope between steps flips
+    exactly the next step — with loss parity against the uninterrupted auto
+    run (backends are numerically interchangeable)."""
+    from repro.core import gmm_backend as GB
+    moe_cfg = get_config("qwen3_moe_30b_a3b").reduced().replace(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        num_experts=4, top_k=2, moe_d_ff=64, vocab_size=64, dtype="float32")
+    auto = GB.resolve(None).name
+    tcfg = TrainConfig(total_steps=3, batch_size=2, seq_len=16,
+                       learning_rate=1e-3, log_every=1)
+
+    # Reference: plain auto run (same seed -> identical batches).
+    _, _, hist_ref = train(moe_cfg, tcfg, log=lambda *_: None)
+    assert [h["gmm_backend"] for h in hist_ref] == [auto] * 3
+
+    # Flip step 1 only, via a scope entered/exited inside the step hook.
+    scope = GB.use_backend("segment")
+    seen = []
+
+    def hook(step, metrics):
+        seen.append(metrics["gmm_backend"])
+        assert metrics["step_s"] > 0
+        if step == 0:
+            scope.__enter__()
+        elif step == 1:
+            scope.__exit__(None, None, None)
+
+    _, _, hist = train(moe_cfg, tcfg, log=lambda *_: None, step_hook=hook)
+    assert seen == [auto, "segment", auto]
+    for h_ref, h in zip(hist_ref, hist):
+        np.testing.assert_allclose(h_ref["loss"], h["loss"], rtol=1e-4,
+                                   err_msg=f"step {h['step']}")
+
+
 def test_data_pipeline_deterministic_and_packed():
     pc = PipelineConfig(vocab_size=64, seq_len=32, batch_size=2, seed=3)
     it1, it2 = iter(PackedBatches(pc)), iter(PackedBatches(pc))
