@@ -58,6 +58,100 @@ def bench_dense_config():
         dtype="float32", scan_layers=True)
 
 
+def bench_ep_config():
+    """MoE config for the expert-parallel residual entries.  ``E_loc = E /
+    n_model`` must exceed ``top_k`` for the comparison to be meaningful: the
+    dense-EP formulation materializes (L, E_loc, h) intermediates while the
+    dispatch path's scale with L·k rows."""
+    return bench_config().replace(
+        name="tiny_moe_ep", num_experts=8, top_k=2, moe_d_ff=128,
+        gmm_backend="segment")
+
+
+def _dense_ep_sublayer(x, p, cfg, mesh):
+    """The pre-refactor dense-EP shard_map body — (L, E_loc, h) einsums
+    against a dense (L, E) combine-weight matrix.  Deleted from
+    ``models/moe_block.py`` (the Dispatch-driven path replaced it); kept
+    HERE, next to the other measured baselines, so the dispatch-EP residual
+    numbers are gated against the formulation they displaced."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import routing
+    from repro.core.moe_layer import _silu
+    B, S, d = x.shape
+    E = cfg.num_experts
+    E_loc = E // mesh.shape["model"]
+    p_specs = {"wg": P(None, None), "w1": P("model", None, None),
+               "w2": P("model", None, None), "w3": P("model", None, None)}
+    p_specs = {k: v for k, v in p_specs.items() if k in p}
+
+    def body(xl, pl):
+        xf = xl.reshape(B * S, d)
+        g = routing.top_k_gating(xf, pl["wg"].astype(xf.dtype), cfg.top_k)
+        idx = jax.lax.axis_index("model")
+        L = xf.shape[0]
+        cw = jnp.zeros((L, E), g.topk_weights.dtype)
+        cw = cw.at[jnp.arange(L)[:, None], g.topk_experts].set(g.topk_weights)
+        cw_loc = jax.lax.dynamic_slice_in_dim(cw, idx * E_loc, E_loc, axis=1)
+        a = jnp.einsum("ld,edh->leh", xf, pl["w1"].astype(xf.dtype))
+        y_act = _silu(a) * jnp.einsum("ld,edh->leh", xf,
+                                      pl["w2"].astype(xf.dtype))
+        p_out = jnp.einsum("leh,ehd->led", y_act, pl["w3"].astype(xf.dtype))
+        y = jnp.einsum("le,led->ld", cw_loc.astype(p_out.dtype), p_out)
+        return jax.lax.psum(y, "model").reshape(B, S, d)
+
+    return shard_map(body, mesh=mesh, in_specs=(P(None, None, None), p_specs),
+                     out_specs=P(None, None, None), check=False)(x, p)
+
+
+def ep_saved_residual_entries(*, small: bool = False) -> list:
+    """Dense-EP vs dispatch-EP activation residuals under an expert-sharded
+    mesh, measured in the same run: the refactor's memory claim as tracked
+    numbers.  The dispatch entry is the regression gate; the dense entry
+    documents the baseline it must stay strictly below."""
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models.moe_block import init_moe_params, moe_sublayer
+    if len(jax.devices()) < 2:
+        # Degrade loudly, not fatally: the rest of the memory suite is
+        # device-count independent and must keep running.  A --check against
+        # the committed baseline will then report the EP pair as missing —
+        # an explicit gate signal, not a crash.
+        import sys
+        print("# skipping EP residual entries: need >= 2 host devices "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "before jax initializes; `python -m repro.bench` does this "
+              "automatically)", file=sys.stderr)
+        return []
+    cfg = bench_ep_config()
+    mesh = make_debug_mesh(1, 2)
+    batch, seq = (2, 32) if small else (4, 64)
+    params = jax.eval_shape(
+        lambda k: init_moe_params(k, cfg, cfg.d_model), jax.random.PRNGKey(0))
+    x = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.float32)
+
+    # Both functions return y only, so the router-aux branch is dead code in
+    # both traces and the residual accounting compares like with like.
+    def dispatch_fn(x, p):
+        return moe_sublayer(x, p, cfg.replace(moe_parallel="ep"),
+                            mesh=mesh)[0]
+
+    def dense_fn(x, p):
+        return _dense_ep_sublayer(x, p, cfg, mesh)
+
+    dense_b = saved_residual_nbytes(dense_fn, x, params)
+    disp_b = saved_residual_nbytes(dispatch_fn, x, params)
+    meta = {"batch": batch, "seq": seq, "mesh": "1x2",
+            "num_experts": cfg.num_experts, "top_k": cfg.top_k}
+    prefix = f"memory/{cfg.name}"
+    return [
+        entry(f"{prefix}/ep_dense/residual_bytes", dense_b,
+              kind="residual_bytes", unit="bytes", tolerance_pct=20.0, **meta),
+        entry(f"{prefix}/ep_dispatch/residual_bytes", disp_b,
+              kind="residual_bytes", unit="bytes", tolerance_pct=20.0, **meta),
+    ]
+
+
 def _loss_fn(cfg):
     def loss(params, tokens):
         batch = {"tokens": tokens, "labels": tokens}
@@ -182,4 +276,5 @@ def memory_suite(*, small: bool = False) -> list:
                     out += bench_entries(r["roofline"],
                                          f"memory/{cfg.name}/roofline")
     out += train_step_memory_entries(bench_config(), batch=batch, seq=seq)
+    out += ep_saved_residual_entries(small=small)
     return out

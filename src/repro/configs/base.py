@@ -28,7 +28,12 @@ class ModelConfig:
     top_k: int = 0
     moe_d_ff: int = 0                    # per-expert hidden dim
     moe_impl: str = "blaze"              # blaze | blaze_pallas | megablocks | dense
-    moe_parallel: str = "auto"           # auto | ep | tp (distributed mode)
+    moe_parallel: str = "auto"           # distribution mode: auto | ep |
+    # ep_a2a | tp (README "Distribution modes"; auto -> ep when num_experts
+    # divides the 'model' axis, else tp)
+    moe_a2a_capacity: float = 2.0        # ep_a2a: per-destination-rank slot
+    # capacity factor relative to the uniform share L*k/n_model; slots beyond
+    # it are dropped and accounted in the a2a_overflow stat
     gmm_backend: str = "auto"            # grouped-GEMM backend: auto | ragged
     # | segment | pallas — the *config* slot of the resolution precedence
     # (call-site arg > use_backend scope > this > $REPRO_GMM_BACKEND > auto;

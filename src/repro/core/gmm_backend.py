@@ -164,9 +164,16 @@ def _pallas_gmm_impl(lhs, rhs, group_sizes):
     S = lhs.shape[0]
     h = rhs.shape[-1]
     bh = 128 if h % 128 == 0 else h
-    return gather_gmm(lhs, jnp.arange(S, dtype=jnp.int32),
-                      _offsets_of(group_sizes), rhs,
-                      epilogue=False, bh=bh, interpret=True)
+    offsets = _offsets_of(group_sizes)
+    out = gather_gmm(lhs, jnp.arange(S, dtype=jnp.int32), offsets, rhs,
+                     epilogue=False, bh=bh, interpret=True)
+    # Backend contract: rows past the group-size total belong to no group and
+    # must be exact zeros.  Output tiles no work item visits are never
+    # written by the kernel (uninitialized, not zero) — mask them explicitly,
+    # mirroring the empty-expert zeroing in _pallas_dw_impl.  Rows inside a
+    # visited tile are already zeroed by the in-tile gather mask.
+    rows = jnp.arange(S, dtype=jnp.int32)[:, None]
+    return jnp.where(rows < offsets[-1], out, jnp.zeros((), out.dtype))
 
 
 def _pallas_dw_impl(lhs, dout, group_sizes):

@@ -128,6 +128,54 @@ def build_dispatch(topk_experts: jax.Array, num_experts: int) -> Dispatch:
     )
 
 
+def slice_dispatch(d: Dispatch, e_lo, e_hi, *,
+                   count: int | None = None) -> Dispatch:
+    """Compact a global :class:`Dispatch` to the expert range ``[e_lo, e_hi)``
+    (the device-local view under expert parallelism).
+
+    The slot space is *rotated*, not truncated: globally each of the ``L*k``
+    slots has a unique destination in ``[0, L*k)``, and subtracting the
+    range's first offset modulo ``L*k`` is a bijection, so
+
+      * slots of the local experts land contiguously at ``[0, n_loc)``
+        (``n_loc = offsets[e_hi] - offsets[e_lo]``) in global expert order —
+        exactly the prefix a grouped GEMM with the rebased ``expert_lengths``
+        consumes;
+      * every *non-local* slot lands uniquely in the dead zone
+        ``[n_loc, L*k)``.  Grouped-GEMM backends define rows past the
+        group-size total as belonging to no group (output zero), so a combine
+        gathering through the sliced ``token_index_map`` picks up exact zeros
+        for non-local slots — summing the per-range outputs (one ``psum``)
+        reassembles the global combine with no padding and no dense ``L×E``
+        buffer.
+
+    ``expert_token_offsets``/``expert_lengths`` are rebased to the local
+    range; ``token_expert_indices`` is rebased by ``-e_lo`` (out-of-range
+    values mark non-local slots).  ``e_lo``/``e_hi`` may be traced (e.g.
+    ``axis_index * E_loc`` inside ``shard_map``); the local expert *count*
+    must be static — pass ``count=`` when the bounds are traced.
+    """
+    if count is None:
+        count = int(e_hi) - int(e_lo)
+    if count <= 0:
+        raise ValueError(f"empty expert range [{e_lo}, {e_hi})")
+    e_lo = jnp.asarray(e_lo, jnp.int32)
+    S = d.expert_token_indices.shape[0]
+    off = jax.lax.dynamic_slice_in_dim(d.expert_token_offsets, e_lo, count + 1)
+    lens = jax.lax.dynamic_slice_in_dim(d.expert_lengths, e_lo, count)
+    start = off[0]
+    # Rotate the slot axis so the local range starts at 0 (explicit gather —
+    # works with a traced start index on every backend).
+    src = (jnp.arange(S, dtype=jnp.int32) + start) % S
+    return Dispatch(
+        expert_token_indices=jnp.take(d.expert_token_indices, src, axis=0),
+        expert_token_offsets=(off - start).astype(jnp.int32),
+        token_expert_indices=(d.token_expert_indices - e_lo).astype(jnp.int32),
+        token_index_map=((d.token_index_map - start) % S).astype(jnp.int32),
+        expert_lengths=lens.astype(jnp.int32),
+    )
+
+
 def build_dispatch_sort(topk_experts: jax.Array, num_experts: int) -> Dispatch:
     """Sort-based baseline (paper §4.2's strawman): global stable sort by
     expert id, then index recovery.  Produces identical structures."""

@@ -11,7 +11,9 @@ Usage:
 
 ``--gmm-backend`` pins the grouped-GEMM backend (repro.core.gmm_backend) for
 every MoE lowering in the run — e.g. ``--gmm-backend segment`` probes the
-portable path, ``ragged`` the XLA fast path on newer JAX.
+portable path, ``ragged`` the XLA fast path on newer JAX.  ``--moe-parallel``
+pins the MoE distribution mode (auto | ep | ep_a2a | tp) for every lowering —
+both the weight PartitionSpecs and the shard_map execution path follow it.
 """
 
 import os
@@ -295,8 +297,14 @@ def main(argv=None):
     ap.add_argument("--gmm-backend", default=None,
                     help="grouped-GEMM backend for MoE lowerings "
                          "(ragged | segment | pallas; default auto)")
+    ap.add_argument("--moe-parallel", default=None,
+                    choices=["auto", "ep", "ep_a2a", "tp"],
+                    help="MoE distribution mode override (config field "
+                         "moe_parallel; see README 'Distribution modes')")
     args = ap.parse_args(argv)
     overrides = json.loads(args.override) if args.override else None
+    if args.moe_parallel:
+        overrides = dict(overrides or {}, moe_parallel=args.moe_parallel)
     # --gmm-backend pins via a use_backend scope around the whole run — a
     # process-local, exception-safe pin (the old os.environ mutation leaked
     # into anything else alive in the process).

@@ -1,14 +1,30 @@
-"""MoE transformer sublayer: router + MoEBlaze expert FFN, with the
-distributed (beyond-paper) integration.
+"""MoE transformer sublayer: router + MoEBlaze expert FFN, with padding-free
+distributed execution.
 
-Distribution (DESIGN.md §5): tokens stay sharded on the data axes; every
-expert's FFN hidden dimension ``h`` is tensor-sharded over ``model``.  Inside
-the ``shard_map`` body each device runs the *unmodified single-device
-MoEBlaze algorithm* — local gating, sort-free dispatch build, gather-GMM
-experts, gather-of-partials combine — on its local tokens and its ``h``-shard
-of every expert, followed by a single ``psum`` over ``model``.  This keeps the
-paper's dropless, never-materialized dispatch intact per device, adds exactly
-one collective per MoE layer, and needs no ragged all-to-all.
+One *Dispatch-driven* path (paper §4.1) serves every expert placement — the
+compact index structures from ``core/routing.py`` are built once and either
+used whole (single device, TP) or compacted to a device-local expert range
+(``routing.slice_dispatch``), so the fused-SwiGLU ``custom_vjp``, the
+paper's residual policy, the ``checkpoint.tag`` remat tags and the resolved
+grouped-GEMM backend apply identically on one device and under a mesh.
+
+Distribution modes (``cfg.moe_parallel``, README "Distribution modes"):
+
+  * ``ep``     — experts sharded over 'model' (weights never gathered).  Each
+    device slices the global Dispatch to its expert range and runs the SAME
+    ``moe_ffn_blaze`` on its local tokens; one ``psum`` combines partials.
+    Non-local slots rotate into the sliced structure's dead zone, where the
+    grouped GEMM produces exact zeros — no capacity padding, no dense L×E.
+  * ``ep_a2a`` — tokens sharded over 'model' as well: each device routes its
+    L/n chunk, groups slots by destination rank with the same sort-free
+    dispatch build, and exchanges capacity-bounded row buffers with
+    ``jax.lax.all_to_all`` (counts first; overflow is accounted and surfaced
+    as a stat, never silently padded).  The first genuinely distributed
+    dispatch in the repo.
+  * ``tp``     — every expert's hidden dim tensor-sharded over 'model'; the
+    unmodified single-device algorithm runs per shard.
+  * ``auto``   — ``ep`` when the expert count divides the model axis, else
+    ``tp``.
 """
 
 from __future__ import annotations
@@ -25,6 +41,8 @@ from repro.core.checkpoint import MOE_GATES, tag
 from repro.core.moe_layer import moe_ffn_blaze
 from repro.models.common import dense_init
 
+MOE_PARALLEL_MODES = ("auto", "ep", "ep_a2a", "tp")
+
 
 def init_moe_params(key, cfg, d: int) -> dict:
     E, h = cfg.num_experts, cfg.moe_d_ff
@@ -40,8 +58,69 @@ def init_moe_params(key, cfg, d: int) -> dict:
     return p
 
 
-def _moe_local(xf: jax.Array, p: dict, cfg):
-    """Single-device MoEBlaze path on a (L, d) token slab."""
+def resolve_moe_parallel(cfg, mesh) -> str:
+    """Concrete distribution mode for (cfg, mesh): ``single`` | ``tp`` |
+    ``ep`` | ``ep_a2a``.
+
+    Validates forced modes at entry: expert parallelism with
+    ``E % n_model != 0`` would truncate ``E_loc = E // n_model`` and silently
+    drop experts — raise a clear error instead of computing garbage.
+    """
+    if cfg.moe_parallel not in MOE_PARALLEL_MODES:
+        raise ValueError(
+            f"unknown moe_parallel {cfg.moe_parallel!r}; "
+            f"known: {MOE_PARALLEL_MODES}")
+    if mesh is None:
+        return "single"
+    n_model = mesh.shape.get("model", 1)
+    if cfg.moe_parallel == "auto":
+        ep = (cfg.num_experts % max(n_model, 1) == 0
+              and cfg.num_experts >= n_model and n_model > 1)
+        return "ep" if ep else "tp"
+    if cfg.moe_parallel in ("ep", "ep_a2a") and n_model > 1 \
+            and cfg.num_experts % n_model != 0:
+        raise ValueError(
+            f"moe_parallel={cfg.moe_parallel!r} requires num_experts "
+            f"divisible by the 'model' axis, got E={cfg.num_experts} % "
+            f"n_model={n_model} != 0 — E_loc = E // n_model would silently "
+            "drop experts.  Use moe_parallel='tp' or resize the mesh.")
+    return cfg.moe_parallel
+
+
+def _aux_of(g, cfg):
+    return (cfg.aux_loss_weight *
+            routing.load_balance_loss(g.router_probs, g.topk_experts,
+                                      cfg.num_experts)
+            + cfg.z_loss_weight * routing.router_z_loss(g.logits))
+
+
+def _moe_dispatch(xf: jax.Array, p: dict, cfg, g, disp, rb, *,
+                  sliced: bool = False):
+    """The shared Dispatch-driven expert compute: gate tagging + the chosen
+    implementation over an (already global or already sliced) dispatch.
+
+    Under a sliced dispatch the fused-Pallas composition (``blaze_pallas``)
+    and the GShard ``dense`` oracle fall through to ``moe_ffn_blaze`` — the
+    fused kernels are a single-device composition (``cfg.use_pallas``
+    contract) and the dense oracle has no dispatch to slice; the resolved
+    backend still selects the grouped-GEMM kernels inside.
+    """
+    gates = tag(g.topk_weights.astype(xf.dtype), MOE_GATES)
+    if cfg.moe_impl == "megablocks":
+        return moe_ffn_megablocks(xf, gates, disp, p["w1"], p["w3"],
+                                  p.get("w2"), activation=cfg.ffn_act,
+                                  backend=rb)
+    if cfg.moe_impl == "blaze_pallas" and not sliced:
+        from repro.kernels.ops import moe_ffn_blaze_pallas
+        return moe_ffn_blaze_pallas(xf, gates, disp, p["w1"], p["w3"],
+                                    p["w2"], backend=rb)
+    return moe_ffn_blaze(xf, gates, disp, p["w1"], p["w3"], p.get("w2"),
+                         activation=cfg.ffn_act, save_yswi=cfg.save_yswi,
+                         backend=rb)
+
+
+def _moe_local(xf: jax.Array, p: dict, cfg, backend=None):
+    """Single-device / tensor-parallel MoEBlaze path on a (L, d) token slab."""
     E, k = cfg.num_experts, cfg.top_k
     g = routing.top_k_gating(xf, p["wg"].astype(xf.dtype), k)
     if cfg.moe_impl == "proxy_gmm":
@@ -66,125 +145,198 @@ def _moe_local(xf: jax.Array, p: dict, cfg):
         parts = jnp.take(p_out, disp.token_index_map.reshape(-1),
                          axis=0).reshape(L, k, -1)
         y = jnp.einsum("lk,lkd->ld", gates, parts)
-        aux = (cfg.aux_loss_weight *
-               routing.load_balance_loss(g.router_probs, g.topk_experts, E)
-               + cfg.z_loss_weight * routing.router_z_loss(g.logits))
-        return y, aux
+        return y, _aux_of(g, cfg)
     if cfg.moe_impl == "dense":
         y = moe_ffn_dense(xf, g.router_probs, g.topk_experts,
                           g.topk_weights.astype(xf.dtype),
                           p["w1"], p["w3"], p.get("w2"),
                           activation=cfg.ffn_act)
+        return y, _aux_of(g, cfg)
+    if cfg.moe_impl == "blaze_pallas":
+        from repro.kernels.dispatch import build_dispatch_pallas
+        disp = build_dispatch_pallas(g.topk_experts, E)
     else:
-        if cfg.moe_impl == "blaze_pallas":
-            from repro.kernels.dispatch import build_dispatch_pallas
-            disp = build_dispatch_pallas(g.topk_experts, E)
-        else:
-            disp = routing.build_dispatch(g.topk_experts, E)
-        gates = tag(g.topk_weights.astype(xf.dtype), MOE_GATES)
-        # cfg.gmm_backend enters the precedence chain at the *config* slot:
-        # an explicit call-site choice or an active use_backend() scope wins,
-        # env/auto fill in when the config says "auto".
-        rb = GB.resolve(None, config=cfg.gmm_backend)
-        if cfg.moe_impl == "megablocks":
-            y = moe_ffn_megablocks(xf, gates, disp, p["w1"], p["w3"],
-                                   p.get("w2"), activation=cfg.ffn_act,
-                                   backend=rb)
-        elif cfg.moe_impl == "blaze_pallas":
-            from repro.kernels.ops import moe_ffn_blaze_pallas
-            y = moe_ffn_blaze_pallas(xf, gates, disp, p["w1"], p["w3"],
-                                     p["w2"], backend=rb)
-        else:
-            y = moe_ffn_blaze(xf, gates, disp, p["w1"], p["w3"], p.get("w2"),
-                              activation=cfg.ffn_act,
-                              save_yswi=cfg.save_yswi,
-                              backend=rb)
-    aux = (cfg.aux_loss_weight *
-           routing.load_balance_loss(g.router_probs, g.topk_experts, E)
-           + cfg.z_loss_weight * routing.router_z_loss(g.logits))
-    return y, aux
-
-
-def _aux_of(g, cfg):
-    return (cfg.aux_loss_weight *
-            routing.load_balance_loss(g.router_probs, g.topk_experts,
-                                      cfg.num_experts)
-            + cfg.z_loss_weight * routing.router_z_loss(g.logits))
-
-
-def _moe_local_ep(xf: jax.Array, p: dict, cfg, n_model: int):
-    """Expert-parallel shard body: this device owns ``E/n_model`` experts
-    (weights arrive local via in_specs — no gather).  Each device computes
-    its experts' contributions for all local tokens; ``psum`` over 'model'
-    combines.  Implemented with the dense-dispatch formulation at the XLA
-    level; on real TPU the Pallas gather-GMM (`kernels/gather_gmm.py`) plays
-    this role with no dense waste (cost-modelled by 'proxy_gmm')."""
-    E, k = cfg.num_experts, cfg.top_k
-    E_loc = E // n_model
-    L = xf.shape[0]
-    g = routing.top_k_gating(xf, p["wg"].astype(xf.dtype), k)
-    if cfg.moe_impl == "proxy_gmm":
-        # gmm cost model under EP: ~L·k/n_model rows through one d->h->d,
-        # plus one read of the local expert bank.  NOT numerically the MoE.
-        rows = max(L * k // n_model, 1)
-        xg = jnp.take(xf, jnp.arange(rows) % L, axis=0)
-        a = xg @ p["w1"].sum(0).astype(xf.dtype)
-        y_act = jax.nn.silu(a)
-        if "w2" in p:
-            y_act = y_act * (xg @ p["w2"].sum(0).astype(xf.dtype))
-        p_out = y_act @ p["w3"].sum(0).astype(xf.dtype)
-        y = jnp.zeros_like(xf).at[jnp.arange(rows) % L].add(p_out)
-        gm = g.topk_weights.astype(xf.dtype).mean()
-        return y * gm, _aux_of(g, cfg)
-    # dense-dispatch on the local expert slice
-    idx = jax.lax.axis_index("model")
-    cw = jnp.zeros((L, E), g.topk_weights.dtype)
-    cw = cw.at[jnp.arange(L)[:, None], g.topk_experts].set(g.topk_weights)
-    cw_loc = jax.lax.dynamic_slice_in_dim(cw, idx * E_loc, E_loc, axis=1)
-    a = jnp.einsum("ld,edh->leh", xf, p["w1"].astype(xf.dtype))
-    if cfg.ffn_act == "swiglu" and "w2" in p:
-        from repro.core.moe_layer import _silu
-        y_act = _silu(a) * jnp.einsum("ld,edh->leh", xf,
-                                      p["w2"].astype(xf.dtype))
-    else:
-        from repro.core.moe_layer import _ACTS
-        y_act = _ACTS.get(cfg.ffn_act, _ACTS["silu"])[0](a)
-    p_out = jnp.einsum("leh,ehd->led", y_act, p["w3"].astype(xf.dtype))
-    y = jnp.einsum("le,led->ld", cw_loc.astype(p_out.dtype), p_out)
+        disp = routing.build_dispatch(g.topk_experts, E)
+    # cfg.gmm_backend enters the precedence chain at the *config* slot: an
+    # explicit call-site choice or an active use_backend() scope wins,
+    # env/auto fill in when the config says "auto".
+    rb = GB.resolve(backend, config=cfg.gmm_backend)
+    y = _moe_dispatch(xf, p, cfg, g, disp, rb)
     return y, _aux_of(g, cfg)
 
 
-def moe_sublayer(x: jax.Array, p: dict, cfg, *, mesh=None,
-                 dp_axes=("pod", "data")):
-    """(B, S, d) -> ((B, S, d), aux_loss).
+def _moe_proxy_ep(xf: jax.Array, p: dict, cfg, n_model: int):
+    """gmm cost model under EP: ~L·k/n_model rows through one d->h->d, plus
+    one read of the local expert bank.  NOT numerically the MoE."""
+    k = cfg.top_k
+    L = xf.shape[0]
+    g = routing.top_k_gating(xf, p["wg"].astype(xf.dtype), k)
+    rows = max(L * k // n_model, 1)
+    xg = jnp.take(xf, jnp.arange(rows) % L, axis=0)
+    a = xg @ p["w1"].sum(0).astype(xf.dtype)
+    y_act = jax.nn.silu(a)
+    if "w2" in p:
+        y_act = y_act * (xg @ p["w2"].sum(0).astype(xf.dtype))
+    p_out = y_act @ p["w3"].sum(0).astype(xf.dtype)
+    y = jnp.zeros_like(xf).at[jnp.arange(rows) % L].add(p_out)
+    gm = g.topk_weights.astype(xf.dtype).mean()
+    return y * gm, _aux_of(g, cfg)
 
-    Distribution modes (DESIGN.md §5):
-      * EP — experts sharded over 'model' when ``E % model == 0`` (weights
-        never gathered; one psum combines expert contributions);
-      * TP — otherwise the expert hidden dim is tensor-sharded over 'model'
-        and the unmodified single-device MoEBlaze algorithm runs per shard.
+
+def _moe_ep(xf: jax.Array, p: dict, cfg, n_model: int, rb):
+    """Expert-parallel shard body: this device owns ``E_loc = E / n_model``
+    experts (weights arrive local via in_specs — no gather).
+
+    Full gating + the sort-free global dispatch build run on the (model-axis
+    replicated) token slab; ``routing.slice_dispatch`` compacts the result to
+    this device's expert range, and the SAME ``moe_ffn_blaze`` path runs on
+    it — the custom-VJP recompute, ``save_yswi`` policy and the resolved
+    grouped-GEMM backend all apply under EP.  ``psum`` over 'model' (outside)
+    combines expert contributions.
+    """
+    E, k = cfg.num_experts, cfg.top_k
+    E_loc = E // max(n_model, 1)
+    g = routing.top_k_gating(xf, p["wg"].astype(xf.dtype), k)
+    disp = routing.build_dispatch(g.topk_experts, E)
+    idx = jax.lax.axis_index("model")
+    loc = routing.slice_dispatch(disp, idx * E_loc, (idx + 1) * E_loc,
+                                 count=E_loc)
+    y = _moe_dispatch(xf, p, cfg, g, loc, rb, sliced=True)
+    return y, _aux_of(g, cfg)
+
+
+def _a2a_capacity(cfg, n_tokens: int, k: int, n_model: int) -> int:
+    """Static per-destination-rank slot capacity: the uniform share
+    ``n_tokens*k/n_model`` scaled by ``cfg.moe_a2a_capacity`` and clamped to
+    the worst case (every slot routed to one rank)."""
+    uniform = (n_tokens * k + n_model - 1) // n_model
+    cap = int(uniform * float(cfg.moe_a2a_capacity))
+    return max(1, min(cap, n_tokens * k))
+
+
+def _moe_ep_a2a(xf: jax.Array, p: dict, cfg, n_model: int, rb):
+    """Token-exchanged expert parallelism (the X-MoE-style padding-free
+    cross-device design, capacity-bounded).
+
+    The local (data-shard) token slab is split over 'model': each rank routes
+    its ``L/n`` chunk, groups slots by destination rank with the SAME
+    sort-free dispatch build (destination rank = expert // E_loc), and
+    exchanges fixed-capacity row buffers with ``jax.lax.all_to_all`` — counts
+    first, then rows; slots beyond a destination's capacity are dropped and
+    *accounted* (returned as an overflow fraction), never padded to a dense
+    ``L×E`` buffer.  Received rows (k=1 slots) run through ``moe_ffn_blaze``
+    against the local expert bank — pad rows carry a trash expert id that
+    ``slice_dispatch`` rotates into the dead zone — and outputs return to
+    their source rank over the same all_to_all pattern.
+    """
+    E, k = cfg.num_experts, cfg.top_k
+    n = max(n_model, 1)
+    E_loc = E // n
+    L, d = xf.shape
+    Lc = L // n
+    idx = jax.lax.axis_index("model")
+    xc = jax.lax.dynamic_slice_in_dim(xf, idx * Lc, Lc, axis=0)
+    g = routing.top_k_gating(xc, p["wg"].astype(xc.dtype), k)
+    gates = tag(g.topk_weights.astype(xc.dtype), MOE_GATES)
+    # Group this chunk's slots by destination rank (sort-free build reused).
+    dest_rank = g.topk_experts // E_loc                       # (Lc, k)
+    dr = routing.build_dispatch(dest_rank, n)
+    C = _a2a_capacity(cfg, Lc, k, n)
+    pos_in_rank = dr.token_index_map - dr.expert_token_offsets[dest_rank]
+    valid = pos_in_rank < C
+    # Out-of-capacity slots get an out-of-range index -> scatter-dropped.
+    buf_idx = jnp.where(valid, dest_rank * C + pos_in_rank, n * C)
+    flat_idx = buf_idx.reshape(-1)
+    tok_rows = jnp.repeat(jnp.arange(Lc, dtype=jnp.int32), k)
+    send_x = jnp.zeros((n * C, d), xc.dtype).at[flat_idx].set(
+        jnp.take(xc, tok_rows, axis=0), mode="drop")
+    send_g = jnp.zeros((n * C,), gates.dtype).at[flat_idx].set(
+        gates.reshape(-1), mode="drop")
+    e_local = (g.topk_experts % E_loc).reshape(-1).astype(jnp.int32)
+    send_e = jnp.full((n * C,), E_loc, jnp.int32).at[flat_idx].set(
+        e_local, mode="drop")
+    # Counts first: each rank learns how many rows every peer sent it ...
+    sent = jnp.minimum(dr.expert_lengths, C)
+    recv_cnt = jax.lax.all_to_all(
+        sent.reshape(n, 1), "model", 0, 0).reshape(n)
+    # ... then the capacity-bounded row buffers.
+    recv_x = jax.lax.all_to_all(
+        send_x.reshape(n, C, d), "model", 0, 0).reshape(n * C, d)
+    recv_g = jax.lax.all_to_all(
+        send_g.reshape(n, C), "model", 0, 0).reshape(n * C)
+    recv_e = jax.lax.all_to_all(
+        send_e.reshape(n, C), "model", 0, 0).reshape(n * C)
+    # Mask rows past each source's announced count to the trash expert
+    # (belt over the sender-side pad fill).
+    row_valid = (jnp.arange(C, dtype=jnp.int32)[None, :]
+                 < recv_cnt[:, None]).reshape(n * C)
+    recv_e = jnp.where(row_valid, recv_e, E_loc)
+    recv_g = jnp.where(row_valid, recv_g, jnp.zeros((), recv_g.dtype))
+    # Received rows are k=1 slots; build over E_loc+1 experts (the extra one
+    # collects pads/overflow) and slice the real range — trash slots rotate
+    # into the dead zone where the grouped GEMM produces zeros.
+    full = routing.build_dispatch(recv_e[:, None], E_loc + 1)
+    loc = routing.slice_dispatch(full, 0, E_loc)
+    y_rows = moe_ffn_blaze(recv_x, recv_g[:, None], loc, p["w1"], p["w3"],
+                           p.get("w2"), activation=cfg.ffn_act,
+                           save_yswi=cfg.save_yswi, backend=rb)
+    # Return outputs to their source rank (all_to_all is its own inverse
+    # under this split/concat pattern), gather back into (Lc, k) slots.
+    back = jax.lax.all_to_all(
+        y_rows.reshape(n, C, d), "model", 0, 0).reshape(n * C, d)
+    parts = jnp.where(
+        valid.reshape(-1)[:, None],
+        jnp.take(back, jnp.minimum(flat_idx, n * C - 1), axis=0),
+        jnp.zeros((), back.dtype)).reshape(Lc, k, d)
+    yc = parts.sum(axis=1).astype(xf.dtype)
+    y = jax.lax.dynamic_update_slice_in_dim(
+        jnp.zeros_like(xf), yc, idx * Lc, axis=0)
+    dropped = (dr.expert_lengths - sent).sum()
+    overflow = dropped.astype(jnp.float32) / float(Lc * k)
+    return y, _aux_of(g, cfg), overflow
+
+
+def moe_sublayer(x: jax.Array, p: dict, cfg, *, mesh=None,
+                 dp_axes=("pod", "data"), with_stats: bool = False):
+    """(B, S, d) -> ((B, S, d), aux_loss) — plus a stats dict when
+    ``with_stats=True`` (``a2a_overflow``: fraction of routed slots dropped
+    by the ``ep_a2a`` capacity bound; 0.0 in every other mode).
+
+    Distribution is selected by :func:`resolve_moe_parallel` (validated at
+    entry) and executed by one Dispatch-driven path — see the module
+    docstring and README "Distribution modes".
     """
     B, S, d = x.shape
+    mode = resolve_moe_parallel(cfg, mesh)
 
-    if mesh is None:
+    if mode == "single":
         y, aux = _moe_local(x.reshape(B * S, d), p, cfg)
-        return y.reshape(B, S, d), aux
+        y = y.reshape(B, S, d)
+        if with_stats:
+            return y, aux, {"a2a_overflow": jnp.zeros((), jnp.float32)}
+        return y, aux
 
     n_model = mesh.shape.get("model", 1)
-    if cfg.moe_parallel == "ep":
-        ep = True
-    elif cfg.moe_parallel == "tp":
-        ep = False
-    else:
-        ep = (cfg.num_experts % max(n_model, 1) == 0
-              and cfg.num_experts >= n_model and n_model > 1)
+    # Resolve the grouped-GEMM backend HERE, at trace time outside the
+    # shard_map, and thread the ResolvedBackend into the body: use_backend
+    # scopes and config pins reach the distributed path exactly like the
+    # single-device one.
+    rb = GB.resolve(None, config=cfg.gmm_backend)
     dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
     n_dp = 1
     for a in dp_axes:
         n_dp *= mesh.shape[a]
     batch_axes = dp_axes if (B % max(n_dp, 1) == 0 and n_dp > 1) else ()
+    if mode == "ep_a2a":
+        tokens_per_dev = (B // n_dp if batch_axes else B) * S
+        if tokens_per_dev % max(n_model, 1) != 0:
+            raise ValueError(
+                f"moe_parallel='ep_a2a' splits the per-device token slab "
+                f"over the 'model' axis: {tokens_per_dev} tokens/device % "
+                f"n_model={n_model} != 0.  Pad the batch/sequence or use "
+                "moe_parallel='ep'.")
     x_spec = P(batch_axes if batch_axes else None, None, None)
-    if ep:
+    if mode in ("ep", "ep_a2a"):
         p_specs = {"wg": P(None, None), "w1": P("model", None, None),
                    "w2": P("model", None, None), "w3": P("model", None, None)}
     else:
@@ -196,19 +348,27 @@ def moe_sublayer(x: jax.Array, p: dict, cfg, *, mesh=None,
     def body(xl, pl_):
         Bl, Sl, _ = xl.shape
         xf = xl.reshape(Bl * Sl, d)
-        if ep:
-            y, aux = _moe_local_ep(xf, pl_, cfg, n_model)
+        overflow = jnp.zeros((), jnp.float32)
+        if mode in ("ep", "ep_a2a") and cfg.moe_impl == "proxy_gmm":
+            y, aux = _moe_proxy_ep(xf, pl_, cfg, n_model)
+        elif mode == "ep":
+            y, aux = _moe_ep(xf, pl_, cfg, n_model, rb)
+        elif mode == "ep_a2a":
+            y, aux, overflow = _moe_ep_a2a(xf, pl_, cfg, n_model, rb)
         else:
-            y, aux = _moe_local(xf, pl_, cfg)
+            y, aux = _moe_local(xf, pl_, cfg, backend=rb)
         # The one collective the MoE layer adds: combine partials.
         y = jax.lax.psum(y, "model")
         aux = jax.lax.pmean(aux, all_axes)
-        return y.reshape(Bl, Sl, d), aux
+        overflow = jax.lax.pmean(overflow, all_axes)
+        return y.reshape(Bl, Sl, d), aux, overflow
 
-    y, aux = shard_map(
+    y, aux, overflow = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, p_specs),
-        out_specs=(x_spec, P()),
+        out_specs=(x_spec, P(), P()),
         check=False,
     )(x, p)
+    if with_stats:
+        return y, aux, {"a2a_overflow": overflow}
     return y, aux

@@ -89,8 +89,10 @@ def init_params(key, cfg) -> dict:
 
 
 def _apply_sublayer(x, p, kind: str, cfg, *, mesh, positions, cache):
-    """Returns (x, aux, new_cache)."""
+    """Returns (x, aux, stats, new_cache) — ``aux`` the scalar aux loss,
+    ``stats`` the scalar ``ep_a2a`` routing-overflow fraction."""
     aux = jnp.zeros((), jnp.float32)
+    stats = jnp.zeros((), jnp.float32)
     if kind in ATTN_KINDS:
         is_local = "local" in kind and cfg.sliding_window > 0
         h = rms_norm(x, p["ln1"])
@@ -102,22 +104,24 @@ def _apply_sublayer(x, p, kind: str, cfg, *, mesh, positions, cache):
         x = x + h
         h = rms_norm(x, p["ln2"])
         if kind.endswith("moe"):
-            h, aux = moe_sublayer(h, p["moe"], cfg, mesh=mesh)
+            h, aux, mstats = moe_sublayer(h, p["moe"], cfg, mesh=mesh,
+                                          with_stats=True)
+            stats = mstats["a2a_overflow"]
         else:
             h = ffn_sublayer(h, p["ffn"], cfg)
         if cfg.post_norms:
             h = rms_norm(h, p["ln2_post"])
-        return x + h, aux, (new_kv,)
+        return x + h, aux, stats, (new_kv,)
     if kind == "mlstm":
         h, st = ssm.mlstm_sublayer(
             rms_norm(x, p["ln1"]), p["mlstm"], cfg,
             state=cache[0] if cache is not None else None)
-        return x + h, aux, (st,)
+        return x + h, aux, stats, (st,)
     if kind == "slstm":
         h, st = ssm.slstm_sublayer(
             rms_norm(x, p["ln1"]), p["slstm"], cfg,
             state=cache[0] if cache is not None else None)
-        return x + h, aux, (st,)
+        return x + h, aux, stats, (st,)
     if kind == "hymba":
         h = rms_norm(x, p["ln1"])
         ha, new_kv = attention_sublayer(
@@ -128,20 +132,22 @@ def _apply_sublayer(x, p, kind: str, cfg, *, mesh, positions, cache):
             state=cache[1] if cache is not None else None)
         x = x + 0.5 * (ha + hm)            # parallel heads, mean-fused
         h = ffn_sublayer(rms_norm(x, p["ln2"]), p["ffn"], cfg)
-        return x + h, aux, (new_kv, st)
+        return x + h, aux, stats, (new_kv, st)
     raise ValueError(kind)
 
 
 def _apply_group(x, gp, cfg, *, mesh, positions, cache_group):
     auxes = []
+    stats = []
     new_caches = []
     for j, kind in enumerate(cfg.block_pattern):
         c = cache_group[j] if cache_group is not None else None
-        x, aux, nc = _apply_sublayer(x, gp[j], kind, cfg, mesh=mesh,
-                                     positions=positions, cache=c)
+        x, aux, st, nc = _apply_sublayer(x, gp[j], kind, cfg, mesh=mesh,
+                                         positions=positions, cache=c)
         auxes.append(aux)
+        stats.append(st)
         new_caches.append(nc)
-    return x, sum(auxes), tuple(new_caches)
+    return x, sum(auxes), sum(stats), tuple(new_caches)
 
 
 # ---------------------------------------------------------------------------
@@ -183,38 +189,44 @@ def _act_constraint(x, mesh):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
-def forward(params, batch, cfg, *, mesh=None, last_only: bool = False):
-    """Full-sequence forward (training / prefill).  Returns (logits, aux).
-    ``last_only`` emits logits for the final position only (prefill)."""
+def forward(params, batch, cfg, *, mesh=None, last_only: bool = False,
+            with_stats: bool = False):
+    """Full-sequence forward (training / prefill).  Returns (logits, aux) —
+    plus a stats dict (``moe_overflow``: layer-summed ``ep_a2a`` routing
+    overflow fraction) when ``with_stats=True``.  ``last_only`` emits logits
+    for the final position only (prefill)."""
     x = _embed_inputs(params, batch, cfg)
     B, S, _ = x.shape
     positions = jnp.arange(S)
     x = _act_constraint(x, mesh)
 
     def group_fn(carry, gp):
-        x, aux = carry
-        x, a, _ = _apply_group(x, gp, cfg, mesh=mesh, positions=positions,
-                               cache_group=None)
-        return (_act_constraint(x, mesh), aux + a), None
+        x, aux, ov = carry
+        x, a, o, _ = _apply_group(x, gp, cfg, mesh=mesh, positions=positions,
+                                  cache_group=None)
+        return (_act_constraint(x, mesh), aux + a, ov + o), None
 
     if cfg.remat_policy != "full":
         group_fn = jax.checkpoint(
             group_fn, policy=POLICIES[cfg.remat_policy], prevent_cse=False)
 
-    aux0 = jnp.zeros((), jnp.float32)
+    zero = jnp.zeros((), jnp.float32)
     if cfg.scan_layers:
-        (x, aux), _ = jax.lax.scan(group_fn, (x, aux0), params["layers"])
+        (x, aux, ov), _ = jax.lax.scan(group_fn, (x, zero, zero),
+                                       params["layers"])
     else:
-        aux = aux0
+        aux, ov = zero, zero
         for i in range(cfg.num_groups):
             gp = jax.tree.map(lambda l: l[i], params["layers"])
-            (x, aux), _ = group_fn((x, aux), gp)
+            (x, aux, ov), _ = group_fn((x, aux, ov), gp)
 
     if last_only:
         x = x[:, -1:]
     x = rms_norm(x, params["final_norm"])
     logits = x @ params["unembed"].astype(x.dtype)
     logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if with_stats:
+        return logits, aux, {"moe_overflow": ov}
     return logits, aux
 
 
@@ -266,8 +278,8 @@ def decode_step(params, cache, batch, pos, cfg, *, mesh=None):
 
     def group_fn(x, scan_in):
         gp, cache_group = scan_in
-        x, _, nc = _apply_group(x, gp, cfg, mesh=mesh, positions=positions,
-                                cache_group=cache_group)
+        x, _, _, nc = _apply_group(x, gp, cfg, mesh=mesh, positions=positions,
+                                   cache_group=cache_group)
         return x, nc
 
     if cfg.scan_layers:
@@ -293,7 +305,8 @@ def decode_step(params, cache, batch, pos, cfg, *, mesh=None):
 
 
 def train_loss(params, batch, cfg, *, mesh=None):
-    logits, aux = forward(params, batch, cfg, mesh=mesh)
+    logits, aux, stats = forward(params, batch, cfg, mesh=mesh,
+                                 with_stats=True)
     labels = batch["labels"]
     if cfg.input_kind == "mixed":
         # image positions carry no next-token loss
@@ -306,4 +319,5 @@ def train_loss(params, batch, cfg, *, mesh=None):
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     mask = (labels >= 0).astype(jnp.float32)
     loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
-    return loss + aux, {"ce": loss, "aux": aux}
+    return loss + aux, {"ce": loss, "aux": aux,
+                        "moe_overflow": stats["moe_overflow"]}

@@ -51,12 +51,24 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg, params, *, batch_slots: int = 4,
                  capacity: int = 512, greedy: bool = True, seed: int = 0,
-                 gmm_backend: str | None = None):
+                 gmm_backend: str | None = None, mesh=None):
         # Snapshot the backend resolution at construction: precedence is the
         # explicit engine argument > active use_backend scope >
         # cfg.gmm_backend > env > auto, frozen into a ResolvedBackend.
         self.backend = GB.resolve(gmm_backend, config=cfg.gmm_backend)
         self.cfg = cfg.replace(gmm_backend=self.backend.name)
+        # Validate the MoE distribution mode for this (cfg, mesh) pairing at
+        # construction — decode steps run it via shard_map when a mesh is
+        # given, and a bad pairing must not surface mid-generate.  ep_a2a is
+        # degenerate for decode (single-token slabs rarely divide the model
+        # axis, and there is nothing to exchange at S=1), so it falls back to
+        # plain EP: numerically identical, same expert-sharded weight layout.
+        if cfg.is_moe:
+            from repro.models.moe_block import resolve_moe_parallel
+            mode = resolve_moe_parallel(self.cfg, mesh)
+            if mode == "ep_a2a":
+                self.cfg = self.cfg.replace(moe_parallel="ep")
+        self.mesh = mesh
         self.params = params
         self.slots = batch_slots
         self.capacity = capacity
@@ -73,7 +85,7 @@ class ServeEngine:
             cfg = self.cfg.replace(gmm_backend=backend_name)
             fn = jax.jit(
                 lambda p, c, tok, pos: T.decode_step(
-                    p, c, {"tokens": tok}, pos, cfg),
+                    p, c, {"tokens": tok}, pos, cfg, mesh=self.mesh),
                 donate_argnums=(1,))   # cache updated in place
             self._decode_fns[backend_name] = fn
         return fn

@@ -1,10 +1,12 @@
 """Logical-axis sharding rules -> PartitionSpecs, divisibility-aware.
 
-Strategy (DESIGN.md §5):
+Strategy (DESIGN.md §5, README "Distribution modes"):
   * params: FSDP x TP — input-side matrices P('data', 'model'), output-side
-    (projections back to d_model) P('model', 'data'); MoE expert tensors keep
-    the expert dim replicated and tensor-shard the hidden dim on 'model'
-    (matching the shard_map specs in models/moe_block.py).
+    (projections back to d_model) P('model', 'data'); MoE expert tensors
+    shard the *expert* dim over 'model' under expert parallelism
+    (``moe_parallel`` 'ep'/'ep_a2a', or 'auto' when the expert count divides
+    the axis) and otherwise tensor-shard the per-expert hidden dim on
+    'model' (matching the shard_map specs in models/moe_block.py).
   * every rule checks divisibility and falls back to replication for that dim
     (never uneven padding) — e.g. hubert's vocab=504 vs a 16-way axis.
   * activations/batches: batch on ('pod','data'); decode caches shard batch
@@ -59,8 +61,9 @@ def _leaf_spec(path_keys: list[str], shape: tuple, mesh,
         # Expert-parallel when the expert count divides the model axis
         # (qwen3-moe: 8 experts/device, no weight gather in the MoE body);
         # tensor-parallel on the expert hidden dim otherwise (mixtral).
+        # 'ep_a2a' keeps the EP weight layout — only token placement differs.
         ep = _fit(dims[0], mesh, "model") if moe_parallel == "auto" \
-            else (moe_parallel == "ep")
+            else (moe_parallel in ("ep", "ep_a2a"))
         if ep:
             return prefix + ("model", _fit(dims[1], mesh, "data"), None)
         if name in _MOE_IN:                          # (E, d, h)

@@ -48,6 +48,12 @@ def make_train_step(cfg, tcfg, *, mesh=None, backend=None):
     (gradient accumulation — bounds activation memory to one microbatch)."""
     resolved = GB.resolve(backend, config=_config_backend(cfg, tcfg))
     cfg = cfg.replace(gmm_backend=resolved.name)
+    if cfg.is_moe:
+        # Fail at construction, not at trace time inside shard_map: an
+        # invalid (moe_parallel, mesh) pairing — e.g. forced 'ep' with
+        # E % n_model != 0 — raises here with a clear message.
+        from repro.models.moe_block import resolve_moe_parallel
+        resolve_moe_parallel(cfg, mesh)
 
     def grads_of(params, batch):
         return jax.value_and_grad(

@@ -125,6 +125,21 @@ def test_memory_accountant_smoke_segment_and_auto():
     assert len(set(residuals.values())) == 1, residuals
 
 
+def test_ep_residual_entries_dispatch_strictly_below_dense():
+    """The tracked expert-parallel pair: the Dispatch-driven EP path must
+    save strictly fewer activation-residual bytes than the dense-EP
+    formulation it replaced, measured in the same run."""
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >=2 host devices")
+    from repro.bench.memory import ep_saved_residual_entries
+    entries = ep_saved_residual_entries(small=True)
+    vals = {e["name"]: e["value"] for e in entries}
+    dense = vals["memory/tiny_moe_ep/ep_dense/residual_bytes"]
+    disp = vals["memory/tiny_moe_ep/ep_dispatch/residual_bytes"]
+    assert 0 < disp < dense, vals
+
+
 def test_median_time_us_protocol():
     import jax.numpy as jnp
 

@@ -197,6 +197,27 @@ def test_segment_matches_moe_dense_oracle():
 
 
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", _param(ALL_BACKENDS))
+@pytest.mark.parametrize("S,sizes", [
+    (32, (5, 0, 7)),          # dead rows inside the first output tile
+    (300, (10, 0, 0)),        # dead rows spanning whole unvisited 128-tiles
+    (300, (0, 0, 0)),         # every group empty: all rows dead
+], ids=["in-tile", "whole-tiles", "all-empty"])
+def test_gmm_trailing_rows_are_exact_zeros(backend, S, sizes):
+    """Backend contract regression: rows past the group-size total belong to
+    no group and must be *exact zeros* — ``slice_dispatch``'s dead zone (the
+    expert-parallel path) combines through them.  The pallas kernel used to
+    leave output tiles no work item visits uninitialized (NaN), poisoning
+    the EP psum whenever a dead zone spanned a full row tile."""
+    d, h = 8, 16
+    lhs, rhs, _, gs = _grouped(5, S, d, h, len(sizes), sizes=None)
+    gs = jnp.asarray(sizes, jnp.int32)
+    total = int(gs.sum())
+    y = np.asarray(GB.gmm(lhs, rhs, gs, backend=backend))
+    assert np.isfinite(y).all()
+    np.testing.assert_array_equal(y[total:], np.zeros((S - total, h)))
+
+
 # Selection semantics
 # ---------------------------------------------------------------------------
 

@@ -11,7 +11,8 @@ except ImportError:
     from hypothesis_fallback import given, settings, st
 
 from repro.core.routing import (build_dispatch, build_dispatch_sort,
-                                load_balance_loss, top_k_gating)
+                                load_balance_loss, slice_dispatch,
+                                top_k_gating)
 
 
 def _random_topk(seed, L, E, k):
@@ -71,6 +72,75 @@ def test_dispatch_invariants(L, E, k, seed):
         assert sorted(seg.tolist()) == chose
         # within-expert ordering is by token id (paper Fig. 2)
         assert list(seg) == sorted(seg)
+
+
+def test_slice_dispatch_full_range_is_identity():
+    topk = _random_topk(0, 33, 8, 2)
+    d = build_dispatch(topk, 8)
+    f = slice_dispatch(d, 0, 8)
+    np.testing.assert_array_equal(f.expert_token_indices,
+                                  d.expert_token_indices)
+    np.testing.assert_array_equal(f.expert_token_offsets,
+                                  d.expert_token_offsets)
+    np.testing.assert_array_equal(f.token_index_map, d.token_index_map)
+    np.testing.assert_array_equal(f.expert_lengths, d.expert_lengths)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_slice_dispatch_pieces_reassemble_global(n_shards):
+    """The sliced pieces are exactly the global build, re-based per shard:
+    concatenating each shard's live prefix reproduces ``build_dispatch``
+    output, and every slot lands either at its re-based position (local) or
+    uniquely in the dead zone (non-local)."""
+    L, E, k = 33, 8, 2
+    topk = _random_topk(7, L, E, k)
+    d = build_dispatch(topk, E)
+    E_loc = E // n_shards
+    tk = np.asarray(topk)
+    pieces = []
+    for s in range(n_shards):
+        loc = slice_dispatch(d, s * E_loc, (s + 1) * E_loc)
+        off = np.asarray(loc.expert_token_offsets)
+        lens = np.asarray(loc.expert_lengths)
+        # offsets re-based to the local range, lengths = the global slice
+        assert off[0] == 0
+        np.testing.assert_array_equal(np.diff(off), lens)
+        np.testing.assert_array_equal(
+            lens, np.asarray(d.expert_lengths)[s * E_loc:(s + 1) * E_loc])
+        n_loc = off[-1]
+        eti = np.asarray(loc.expert_token_indices)
+        tim = np.asarray(loc.token_index_map)
+        pieces.append(eti[:n_loc])
+        owned = (tk // E_loc) == s
+        seen = set()
+        for l in range(L):
+            for i in range(k):
+                if owned[l, i]:
+                    # local slots: live prefix, inverse relation intact
+                    assert tim[l, i] < n_loc and eti[tim[l, i]] == l
+                else:
+                    # non-local slots: unique dead-zone positions (a grouped
+                    # GEMM yields zeros there -> combine picks up exact 0)
+                    assert tim[l, i] >= n_loc
+                assert tim[l, i] not in seen
+                seen.add(tim[l, i])
+    np.testing.assert_array_equal(np.concatenate(pieces),
+                                  np.asarray(d.expert_token_indices))
+
+
+def test_slice_dispatch_traced_bounds_in_jit():
+    """Bounds may be traced (the shard_map use) when ``count`` is given."""
+    topk = _random_topk(3, 16, 4, 2)
+    d = build_dispatch(topk, 4)
+
+    def f(e_lo):
+        loc = slice_dispatch(d, e_lo, e_lo + 2, count=2)
+        return loc.expert_lengths, loc.expert_token_offsets
+
+    lens, off = jax.jit(f)(jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(lens),
+                                  np.asarray(d.expert_lengths[2:4]))
+    assert int(off[0]) == 0
 
 
 @settings(max_examples=20, deadline=None)

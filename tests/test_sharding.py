@@ -1,8 +1,11 @@
-"""Distribution tests on an 8-host-device mesh (set in conftest): sharded
-train steps match single-device numerics, specs respect divisibility, and the
-MoE shard_map path equals the unsharded layer."""
+"""Distribution tests on an 8-host-device mesh (set in conftest; CI pins the
+same count via XLA_FLAGS): sharded train steps match single-device numerics,
+specs respect divisibility, and the MoE distribution modes ({ep, ep_a2a, tp}
+x grouped-GEMM backends x dtypes) match the unsharded oracle forward and
+backward through the one Dispatch-driven path."""
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
@@ -10,11 +13,13 @@ from jax.sharding import PartitionSpec as P
 from repro import sharding as shd
 from repro.configs import get_config
 from repro.configs.base import InputShape, TrainConfig
+from repro.core import gmm_backend as GB
 from repro.launch import specs as S
 from repro.launch.mesh import make_debug_mesh
 from repro.models import transformer as T
-from repro.models.moe_block import moe_sublayer
-from repro.train.loop import make_train_step
+from repro.models.moe_block import (init_moe_params, moe_sublayer,
+                                    resolve_moe_parallel)
+from repro.train.loop import make_train_step, train
 from repro.train.optimizer import init_adamw
 
 pytestmark = pytest.mark.skipif(
@@ -60,6 +65,179 @@ def test_moe_shard_map_matches_single_device():
     # the load-balance aux is computed per data shard and averaged — a local
     # estimator (standard practice), not bit-equal to the global statistic
     np.testing.assert_allclose(float(aux_ref), float(aux_sh), rtol=0.05)
+
+
+# -- the {mode x backend x dtype} parity matrix ------------------------------
+
+# bf16 rounds to 8 mantissa bits at every gmm boundary and the modes order
+# their fp32 reductions differently (psum of per-device partials).
+_TOL = {"float32": dict(rtol=1e-4, atol=1e-5),
+        "bfloat16": dict(rtol=5e-2, atol=5e-2)}
+
+
+def _backend_params():
+    avail = GB.available_backends()
+    return [pytest.param(b, marks=() if b in avail else
+                         pytest.mark.skip(reason=f"{b} unavailable on "
+                                          f"jax {jax.__version__}"))
+            for b in GB.backend_names()]
+
+
+def _matrix_case(dtype, backend, mode):
+    cfg = MOE_CFG.replace(dtype=dtype, param_dtype=dtype,
+                          gmm_backend=backend, moe_parallel=mode,
+                          moe_a2a_capacity=8.0)  # capacity >= worst case
+    p = init_moe_params(jax.random.PRNGKey(3), cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 16, cfg.d_model),
+                          jnp.float32).astype(jnp.dtype(dtype))
+    return cfg, p, x
+
+
+def _y_loss(cfg, mesh):
+    # Grads flow through y only: the load-balance aux under a data-sharded
+    # mesh is a per-shard estimator (see the aux comments below), which
+    # would drown the per-mode comparison in estimator noise.
+    def f(x, p):
+        y, _ = moe_sublayer(x, p, cfg, mesh=mesh, dp_axes=("data",))
+        return (y.astype(jnp.float32) ** 2).mean()
+    return f
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("backend", _backend_params())
+@pytest.mark.parametrize("mode", ["ep", "ep_a2a", "tp"])
+def test_moe_parallel_parity_matrix(mode, backend, dtype):
+    """Every distribution mode, under every available grouped-GEMM backend,
+    at f32 and bf16, matches the unsharded oracle — forward AND gradients —
+    through the one Dispatch-driven path."""
+    mesh = make_debug_mesh(2, 4)
+    cfg, p, x = _matrix_case(dtype, backend, mode)
+    tol = _TOL[dtype]
+
+    y_ref, _ = moe_sublayer(x, p, cfg.replace(moe_parallel="auto"), mesh=None)
+    with mesh:
+        y, _ = jax.jit(lambda x, p: moe_sublayer(
+            x, p, cfg, mesh=mesh, dp_axes=("data",)))(x, p)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol,
+                               err_msg=f"fwd {mode}/{backend}/{dtype}")
+
+    g_ref = jax.grad(_y_loss(cfg.replace(moe_parallel="auto"), None),
+                     argnums=(0, 1))(x, p)
+    with mesh:
+        g = jax.jit(jax.grad(_y_loss(cfg, mesh), argnums=(0, 1)))(x, p)
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(g), jax.tree.leaves(g_ref))):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), **tol,
+            err_msg=f"grad leaf {i} ({mode}/{backend}/{dtype})")
+
+
+def test_ep_a2a_overflow_accounted():
+    """Tight ep_a2a capacity drops slots and *reports* it: the overflow stat
+    is positive, while ample capacity reports exactly 0."""
+    mesh = make_debug_mesh(2, 4)
+    cfg, p, x = _matrix_case("float32", "segment", "ep_a2a")
+    with mesh:
+        _, _, ample = jax.jit(lambda x, p: moe_sublayer(
+            x, p, cfg, mesh=mesh, dp_axes=("data",), with_stats=True))(x, p)
+        tight_cfg = cfg.replace(moe_a2a_capacity=0.25)
+        _, _, tight = jax.jit(lambda x, p: moe_sublayer(
+            x, p, tight_cfg, mesh=mesh, dp_axes=("data",),
+            with_stats=True))(x, p)
+    assert float(ample["a2a_overflow"]) == 0.0
+    assert float(tight["a2a_overflow"]) > 0.0
+
+
+def test_forced_ep_invalid_expert_count_raises():
+    """Forced expert parallelism with E % n_model != 0 must raise (the old
+    path computed E_loc = E // n_model and silently dropped experts)."""
+    mesh = make_debug_mesh(2, 4)
+    bad = MOE_CFG.replace(num_experts=6, moe_parallel="ep")
+    with pytest.raises(ValueError, match="divisible"):
+        resolve_moe_parallel(bad, mesh)
+    with pytest.raises(ValueError, match="divisible"):
+        make_train_step(bad, TrainConfig(), mesh=mesh)
+    from repro.serve.engine import ServeEngine
+    with pytest.raises(ValueError, match="divisible"):
+        ServeEngine(bad.replace(moe_parallel="ep_a2a"), params={}, mesh=mesh)
+    # auto never raises: it falls back to TP for awkward expert counts
+    assert resolve_moe_parallel(bad.replace(moe_parallel="auto"),
+                                mesh) == "tp"
+
+
+def test_serve_engine_degrades_ep_a2a_to_ep():
+    """Valid ep_a2a configs serve as plain EP: single-token decode slabs
+    rarely divide the model axis, and EP is the same math on the same
+    expert-sharded weight layout — the fallback must happen at construction,
+    never as a mid-generate trace error."""
+    from repro.serve.engine import ServeEngine
+    mesh = make_debug_mesh(2, 4)
+    eng = ServeEngine(MOE_CFG.replace(moe_parallel="ep_a2a"), params={},
+                      mesh=mesh)
+    assert eng.cfg.moe_parallel == "ep"
+
+
+def test_ep_a2a_indivisible_tokens_raises():
+    mesh = make_debug_mesh(2, 4)
+    cfg, p, _ = _matrix_case("float32", "segment", "ep_a2a")
+    x = jnp.zeros((4, 15, cfg.d_model))       # 2*15 tokens/device % 4 != 0
+    with pytest.raises(ValueError, match="tokens/device"):
+        moe_sublayer(x, p, cfg, mesh=mesh, dp_axes=("data",))
+
+
+# -- context-scoped backend resolution reaches the distributed path ----------
+
+
+def test_ep_path_honors_context_scoped_backend(monkeypatch):
+    """Regression: the old dense EP body bypassed the gmm_backend resolver —
+    ``use_backend`` had no effect under a mesh.  A recording backend pinned
+    via the context scope must now carry every grouped GEMM of the EP body."""
+    calls = []
+
+    class Spy(GB.SegmentBackend):
+        name = "spy"
+
+        @staticmethod
+        def gmm(lhs, rhs, group_sizes):
+            calls.append("gmm")
+            return GB.SegmentBackend.gmm(lhs, rhs, group_sizes)
+
+        @staticmethod
+        def gmm_dw(lhs, dout, group_sizes):
+            calls.append("gmm_dw")
+            return GB.SegmentBackend.gmm_dw(lhs, dout, group_sizes)
+
+    monkeypatch.setitem(GB._REGISTRY, "spy", Spy)
+    mesh = make_debug_mesh(2, 4)
+    for mode in ("ep", "ep_a2a"):
+        cfg, p, x = _matrix_case("float32", "auto", mode)
+        calls.clear()
+        with mesh, GB.use_backend("spy"):
+            y, _ = jax.jit(lambda x, p: moe_sublayer(
+                x, p, cfg, mesh=mesh, dp_axes=("data",)))(x, p)
+        assert calls, f"{mode} body bypassed the context-scoped backend"
+        y_ref, _ = moe_sublayer(x, p, cfg, mesh=None)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=2e-5, err_msg=mode)
+
+
+def test_step_hook_reports_resolved_backend_under_mesh():
+    """``step_hook`` metrics carry the resolved grouped-GEMM backend when the
+    step runs expert-parallel under an 8-virtual-device mesh, and a context
+    scope retargets it — TrainConfig/use_backend now reach the EP path."""
+    mesh = make_debug_mesh(2, 4)
+    cfg = MOE_CFG.replace(moe_parallel="ep")
+    tcfg = TrainConfig(total_steps=2, batch_size=4, seq_len=16,
+                       learning_rate=1e-3, log_every=1)
+    seen = []
+
+    def hook(step, metrics):
+        seen.append(metrics["gmm_backend"])
+        assert "moe_overflow" in metrics
+
+    with mesh, GB.use_backend("segment"):
+        train(cfg, tcfg, mesh=mesh, log=lambda *_: None, step_hook=hook)
+    assert seen == ["segment", "segment"]
 
 
 def test_sharded_train_step_matches_single_device():
