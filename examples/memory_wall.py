@@ -1,6 +1,8 @@
 """Reproduce the paper's memory-wall quantitative study (§2.1/§2.2 examples)
 and Figure 3/5 analogues at full Table-1 sizes — no execution, pure
-saved-residual accounting.
+saved-residual accounting — then sweep *checkpoint plans* (not just the
+named policies) over the paper configs and print the budget-fit decision
+table (``CheckpointPlan.fit``).
 
     PYTHONPATH=src python examples/memory_wall.py
 """
@@ -11,7 +13,58 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.bench.paper_tables import IMPLS, residual_bytes
-from repro.configs.paper_tables import PAPER_TABLE1
+from repro.configs.paper_tables import PAPER_CONFS, PAPER_TABLE1
+from repro.core.checkpoint import (CheckpointPlan, estimate_saved_bytes,
+                                   get_plan, parse_size)
+
+# Plans swept below: the registry's tag plans plus specs no string enum
+# could express.  NB the static estimator covers the checkpoint-name tags of
+# the scanned stack; the MoE expert FFN's custom-VJP residuals (A/B/Y_swi,
+# the first table above) live *inside* the remat replay and are plan-driven
+# separately (moe:-scoped overrides -> residual modes ab_yswi/ab/x).
+PLAN_SWEEP = ("none", "paper_min", "paper", "save=qkv",
+              "save=qkv,attn_out,moe_gates")
+
+FIT_BUDGETS = ("128MiB", "300MiB", "1GiB")
+
+
+def plan_tables():
+    print("\n== checkpoint-plan sweep: est. saved residual bytes "
+          "(per layer, full Table-1 token counts; plans beyond the named "
+          "registry are specs) ==")
+    print(f"{'conf':12s}" + "".join(
+        f"{p[:28]:>30s}" for p in PLAN_SWEEP))
+    for name, conf in PAPER_TABLE1.items():
+        cfg = PAPER_CONFS[name]
+        _, _, _, b, s = conf
+        row = "".join(
+            f"{estimate_saved_bytes(cfg, p, b * s) / 1e6:28.1f}MB"
+            for p in PLAN_SWEEP)
+        print(f"{name:12s}" + row)
+
+    print("\n== budget-fit decision table (CheckpointPlan.fit over the "
+          "registry candidates) ==")
+    print(f"{'conf':12s}" + "".join(f"{b:>14s}" for b in FIT_BUDGETS))
+    for name, conf in PAPER_TABLE1.items():
+        cfg = PAPER_CONFS[name]
+        _, _, _, b, s = conf
+        row = "".join(
+            f"{CheckpointPlan.fit(cfg, b * s, parse_size(bud)).plan.spec():>14s}"
+            for bud in FIT_BUDGETS)
+        print(f"{name:12s}" + row)
+
+    # Full table for one cell, with a custom spec as the preferred candidate
+    # (what `dryrun --remat-policy <spec> --hbm-budget <b>` runs per arch).
+    prefer = get_plan(PLAN_SWEEP[-2])
+    name, conf = next(iter(PAPER_TABLE1.items()))
+    fit = CheckpointPlan.fit(PAPER_CONFS[name], conf[3] * conf[4],
+                             parse_size(FIT_BUDGETS[1]), prefer=prefer)
+    print(f"\nfull decision table for {name} @ {FIT_BUDGETS[1]} "
+          f"(prefer={PLAN_SWEEP[-2]!r}):")
+    for r in fit.table:
+        mark = "*" if r.chosen else (" " if r.fits else "x")
+        print(f"  [{mark}] est={r.est_saved_bytes / 1e6:9.1f}MB "
+              f"fits={str(r.fits):5s} {r.spec}")
 
 
 def main():
@@ -33,6 +86,8 @@ def main():
             print(f"{name:12s} {act:7s}" +
                   "".join(f"{vals[i]/1e6:12.0f}MB" for i in IMPLS) +
                   f"{ratio:7.2f}x")
+
+    plan_tables()
 
 
 if __name__ == "__main__":

@@ -10,10 +10,14 @@ grouped-GEMM backend), all on abstract shapes (no arrays allocated):
   * **autodiff residuals** — ``saved_residuals`` (the JAX analogue of the
     paper's PyTorch saved-tensor hooks), parameters excluded — what autodiff
     *saves* under the policy;
-  * **static estimate** — ``core.checkpoint.estimate_saved_bytes``, computed
-    from the policy's tag set and the config's shapes alone.  Exact for the
-    name-based policies and completely version-independent, so it is the
-    tightest regression gate.
+  * **static estimate** — ``CheckpointPlan.estimate_saved_bytes``, computed
+    from the plan's scoped tag decisions and the config's shapes alone.
+    Exact for the tag-based plans and completely version-independent, so it
+    is the tightest regression gate.
+
+Every entry stamps the resolved plan's canonical spec in its meta
+(``remat_plan``) — BENCH records are self-describing about which checkpoint
+plan produced each number.
 
 ``memory_suite`` flattens the reports into ``repro.bench.record`` entries and
 couples in the roofline model (``roofline.analyze_compiled`` on the same
@@ -30,12 +34,14 @@ from repro.bench.record import entry
 from repro.compat import saved_residual_nbytes
 from repro.configs import get_config
 from repro.configs.base import InputShape
+from repro.core import checkpoint as CK
 from repro.core import gmm_backend as GB
-from repro.core.checkpoint import estimate_saved_bytes
 from repro.models import transformer as T
 
-#: policy order used by suites and by the ordering assertions in tests.
-POLICY_ORDER = ("none", "paper_min", "paper", "dots", "full")
+#: policy order used by suites and by the ordering assertions in tests —
+#: derived from the CheckpointPlan registry (tag plans by ascending save
+#: set, then the specials), never hand-maintained in parallel again.
+POLICY_ORDER = CK.plan_order()
 
 
 def bench_config():
@@ -166,24 +172,28 @@ def _abstract_args(cfg, batch: int, seq: int):
     return params, tokens
 
 
-def residual_bytes(cfg, policy: str, *, batch: int = 2, seq: int = 32) -> int:
-    """Activation bytes autodiff saves for backward under ``policy``
-    (arguments/parameters excluded)."""
-    cfg = cfg.replace(remat_policy=policy)
+def residual_bytes(cfg, policy, *, batch: int = 2, seq: int = 32) -> int:
+    """Activation bytes autodiff saves for backward under ``policy`` (a plan
+    name, spec, or object; arguments/parameters excluded)."""
+    cfg = cfg.replace(remat_policy=CK.resolve_plan(policy).spec)
     return saved_residual_nbytes(_loss_fn(cfg), *_abstract_args(cfg, batch, seq))
 
 
-def activation_memory_report(cfg, policy: str, *, backend: str | None = None,
+def activation_memory_report(cfg, policy, *, backend: str | None = None,
                              batch: int = 2, seq: int = 32,
                              with_roofline: bool = False,
                              with_residuals: bool = True) -> dict:
-    """Compile fwd+bwd of the train loss under (policy, backend) and account
-    its memory three ways.  Returns a flat dict of numbers (plus the roofline
-    analysis dict when requested).  ``with_residuals=False`` skips the
-    saved-residuals trace and the static estimate (they are backend-
-    independent — callers sweeping the backend axis need them only once)."""
+    """Compile fwd+bwd of the train loss under (plan, backend) and account
+    its memory three ways.  ``policy`` is a plan name, spec, or
+    ``CheckpointPlan``; the resolved canonical spec is stamped into the
+    report (``remat_plan``/``plan_source``).  Returns a flat dict of numbers
+    (plus the roofline analysis dict when requested).
+    ``with_residuals=False`` skips the saved-residuals trace and the static
+    estimate (they are backend-independent — callers sweeping the backend
+    axis need them only once)."""
     rb = GB.resolve(backend, config=cfg.gmm_backend)
-    cfg = cfg.replace(remat_policy=policy, gmm_backend=rb.name)
+    plan_r = CK.resolve_plan(policy)
+    cfg = cfg.replace(remat_policy=plan_r.spec, gmm_backend=rb.name)
     args = _abstract_args(cfg, batch, seq)
     grad = jax.grad(_loss_fn(cfg))
     with GB.use_backend(rb.name):   # pin the trace to the stamped backend
@@ -194,15 +204,16 @@ def activation_memory_report(cfg, policy: str, *, backend: str | None = None,
     tmp_b = getattr(mem, "temp_size_in_bytes", 0)
     alias_b = getattr(mem, "alias_size_in_bytes", 0)
     report = {
-        "config": cfg.name, "policy": policy, "backend": rb.name,
+        "config": cfg.name, "policy": str(policy), "backend": rb.name,
         "backend_source": rb.source,
+        "remat_plan": plan_r.spec, "plan_source": plan_r.source,
         "batch": batch, "seq": seq,
         "arg_bytes": arg_b, "out_bytes": out_b, "temp_bytes": tmp_b,
         "peak_bytes": arg_b + out_b + tmp_b - alias_b,
-        "residual_bytes": (residual_bytes(cfg, policy, batch=batch, seq=seq)
+        "residual_bytes": (residual_bytes(cfg, plan_r, batch=batch, seq=seq)
                            if with_residuals else None),
-        "est_saved_bytes": (estimate_saved_bytes(cfg, policy, batch * seq)
-                            if with_residuals else None),
+        "est_saved_bytes": (plan_r.plan.estimate_saved_bytes(
+            cfg, batch * seq, batch=batch) if with_residuals else None),
     }
     if with_roofline:
         from repro.roofline import analyze_compiled
@@ -219,9 +230,11 @@ def train_step_memory_entries(cfg, *, batch: int = 2, seq: int = 32) -> list:
     tcfg = TrainConfig(batch_size=batch, seq_len=seq)
     mem = compiled_step_memory(cfg, tcfg)
     prefix = f"memory/{cfg.name}/train_step"
-    # The step's resolved backend rides in the meta — stamped from the
-    # resolution the compiled step actually used, not from the env var.
-    meta = {"batch": batch, "seq": seq, "gmm_backend": mem["gmm_backend"]}
+    # The step's resolved backend and checkpoint plan ride in the meta —
+    # stamped from the resolutions the compiled step actually used, not
+    # re-read from the env/config.
+    meta = {"batch": batch, "seq": seq, "gmm_backend": mem["gmm_backend"],
+            "remat_plan": mem["remat_plan"]}
     return [
         entry(f"{prefix}/temp_bytes", mem["temp_bytes"],
               kind="temp_bytes", unit="bytes", tolerance_pct=100.0, **meta),
@@ -254,7 +267,8 @@ def memory_suite(*, small: bool = False) -> list:
                                              with_roofline=with_roofline,
                                              with_residuals=(i == 0))
                 prefix = f"memory/{cfg.name}/{policy}/{backend}"
-                meta = {"batch": batch, "seq": seq}
+                meta = {"batch": batch, "seq": seq,
+                        "remat_plan": r["remat_plan"]}
                 out.append(entry(f"{prefix}/temp_bytes", r["temp_bytes"],
                                  kind="temp_bytes", unit="bytes",
                                  tolerance_pct=100.0, **meta))

@@ -25,7 +25,12 @@ from repro.core.baseline import moe_ffn_megablocks
 from repro.core.moe_layer import moe_ffn_blaze
 from repro.core.routing import build_dispatch, build_dispatch_sort, top_k_gating
 
-IMPLS = ("blaze", "blaze_min", "megablocks")
+IMPLS = ("blaze", "blaze_min", "blaze_x", "megablocks")
+
+#: custom-VJP residual mode per blaze impl (see core/moe_layer.py):
+#: paper-faithful, recompute-Y_swi, and the deepest recompute-A/B point a
+#: ``moe:recompute=ffn_a,ffn_b`` checkpoint plan selects.
+_RESIDUALS = {"blaze": "ab_yswi", "blaze_min": "ab", "blaze_x": "x"}
 
 
 def _layer_fn(impl: str, act: str, E: int, k: int):
@@ -39,7 +44,7 @@ def _layer_fn(impl: str, act: str, E: int, k: int):
                                    activation=act)
         else:
             y = moe_ffn_blaze(x, gates, disp, w1, w3, w2_, activation=act,
-                              save_yswi=(impl == "blaze"))
+                              residuals=_RESIDUALS[impl])
         return (y.astype(jnp.float32) ** 2).sum()
     return f
 

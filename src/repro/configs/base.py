@@ -38,7 +38,11 @@ class ModelConfig:
     # | segment | pallas — the *config* slot of the resolution precedence
     # (call-site arg > use_backend scope > this > $REPRO_GMM_BACKEND > auto;
     # see repro.core.gmm_backend.resolve)
-    save_yswi: bool = True               # paper-faithful Algorithm 1 residuals
+    save_yswi: bool = True               # DEPRECATED alias: the MoE VJP's
+    # Y_swi residual when the checkpoint plan leaves it open.  An explicit
+    # moe-scoped FFN_YSWI decision in `remat_policy` (e.g.
+    # "moe:recompute=ffn_yswi") overrides this bool; see
+    # repro.core.checkpoint.moe_residual_mode.
     aux_loss_weight: float = 0.01
     z_loss_weight: float = 1e-3
 
@@ -66,10 +70,13 @@ class ModelConfig:
     # --- numerics / system ---------------------------------------------------
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
-    # Layer-scan remat: "none" = recompute the layer in backward (production
-    # default; the paper's A/B/Y_swi residual policy is enforced *inside* the
-    # MoE layer's custom VJP and applies during the remat replay).  "paper"
-    # saves the tagged GEMM outputs at every layer instead.
+    # Activation-checkpoint plan: a registry name ("none" | "paper" |
+    # "paper_min" | "full" | "dots") or a CheckpointPlan spec like
+    # "save=ffn_a,ffn_b,qkv;moe:recompute=ffn_yswi" (see
+    # repro.core.checkpoint and README "Activation checkpoint plans").
+    # "none" = recompute the layer in backward (production default; the
+    # paper's A/B/Y_swi residual policy is enforced *inside* the MoE layer's
+    # custom VJP and applies during the remat replay).
     remat_policy: str = "none"
     scan_layers: bool = True
     attn_chunk: int = 512                # flash-attention KV chunk
@@ -86,6 +93,21 @@ class ModelConfig:
     @property
     def is_moe(self) -> bool:
         return self.num_experts > 0
+
+    @property
+    def checkpoint_plan(self):
+        """The resolved :class:`repro.core.checkpoint.CheckpointPlan` behind
+        ``remat_policy`` (name or spec)."""
+        from repro.core.checkpoint import resolve_plan
+        return resolve_plan(config=self.remat_policy).plan
+
+    @property
+    def resolved_save_yswi(self) -> bool:
+        """Derived view of the plan's FFN_YSWI decision in the MoE scope
+        (falls back to the deprecated ``save_yswi`` alias when the plan
+        leaves it open)."""
+        from repro.core.checkpoint import moe_residual_mode
+        return moe_residual_mode(self) == "ab_yswi"
 
     @property
     def pattern_period(self) -> int:

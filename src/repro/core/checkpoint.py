@@ -1,17 +1,53 @@
-"""Smart activation-checkpoint policies (paper §5.2), framework-wide.
+"""Smart activation-checkpoint *plans* (paper §5.2), framework-wide.
 
-The MoEBlaze layer's custom VJP already enforces the paper's residual set for
-the expert FFN.  For the *rest* of the transformer layer (attention, norms,
-dense FFNs) the same principle — "save GEMM outputs, recompute cheap
-elementwise work" — is expressed as `jax.checkpoint` policies applied to the
-scanned layer body.  Tensors are tagged with `checkpoint_name` at creation.
+The checkpointing surface is a first-class :class:`CheckpointPlan`: a frozen
+mapping from each canonical tensor tag (``FFN_A`` … ``MOE_GATES``) to a
+decision (``save`` | ``recompute``), optionally scoped per block kind
+(``attn_ffn``, ``*moe``, ``ssm``, …).  One plan drives every consumer:
+
+  * the ``jax.checkpoint`` policy applied to the scanned layer body
+    (``plan_policies`` — group-level when the decisions are uniform across
+    the block pattern, per-sublayer when a tag is decided differently in two
+    kinds that both materialize it);
+  * the MoE layer's custom-VJP residual set (``moe_residual_mode`` — the
+    paper's A/B/Y_swi policy, Algorithm 1), via *explicit* ``moe``-scoped
+    decisions; the deprecated ``ModelConfig.save_yswi`` bool remains the
+    fallback alias;
+  * the static activation estimator (``CheckpointPlan.estimate_saved_bytes``)
+    that ``repro.bench.memory`` gates against and that
+    :meth:`CheckpointPlan.fit` walks for budget-driven auto-selection.
+
+Plans are named (``"paper"``, ``"paper_min"``, ``"none"``, ``"full"``,
+``"dots"`` — the registry) or spelled as specs::
+
+    save=ffn_a,ffn_b,qkv;moe:recompute=ffn_yswi
+
+i.e. ``;``-separated segments of ``[scope:]save|recompute=tag,...``.
+Unscoped segments build the default decision set (everything starts
+``recompute``); scoped segments override single tags for the block kinds the
+scope matches.  ``ModelConfig.remat_policy`` accepts either form;
+``resolve_plan`` follows the same precedence discipline as
+``repro.core.gmm_backend.resolve`` (call-site arg > config field > default)
+and returns provenance.
+
+Tensors are tagged with ``checkpoint_name`` at creation (``tag``); the MoE
+expert FFN manages its residuals inside the custom VJP instead (see
+``core/moe_layer.py``).
 """
 
 from __future__ import annotations
 
+import fnmatch
+from dataclasses import dataclass
+from functools import lru_cache
+
 import jax
 from jax import checkpoint_policies as cp
 from jax.ad_checkpoint import checkpoint_name
+
+# ---------------------------------------------------------------------------
+# Canonical tags + block-kind scopes
+# ---------------------------------------------------------------------------
 
 # Canonical tag names used across the model zoo.
 FFN_A = "ffn_a"          # first-projection GEMM output (SiLU branch)
@@ -22,73 +58,610 @@ QKV = "qkv"              # fused QKV projection output
 SSM_STATE = "ssm_state"  # recurrent-scan carry snapshots
 MOE_GATES = "moe_gates"  # router top-k weights
 
-# Tag sets per name-based policy.  ``repro.bench.memory`` derives its static
-# activation estimator from these, so they are data, not just policy args.
-POLICY_TAGS = {
-    "none": (),
+CANON_TAGS = (FFN_A, FFN_B, FFN_YSWI, ATTN_OUT, QKV, SSM_STATE, MOE_GATES)
+
+SAVE = "save"
+RECOMPUTE = "recompute"
+_DECISIONS = (SAVE, RECOMPUTE)
+
+#: block kinds the model zoo assembles (``ModelConfig.block_pattern``).
+BLOCK_KINDS = ("attn_ffn", "attn_local_ffn", "attn_moe", "attn_local_moe",
+               "mlstm", "slstm", "hymba")
+
+#: convenience scope aliases -> the block kinds they cover.  Exact kind names
+#: and fnmatch patterns (``*moe``) are also accepted as scopes.
+SCOPE_ALIASES = {
+    "moe": ("attn_moe", "attn_local_moe"),
+    "ffn": ("attn_ffn", "attn_local_ffn", "hymba"),
+    "attn": ("attn_ffn", "attn_local_ffn", "attn_moe", "attn_local_moe",
+             "hymba"),
+    "ssm": ("mlstm", "slstm", "hymba"),
+}
+
+#: the kinds whose scoped decisions drive the MoE custom-VJP residual set.
+MOE_SCOPE_KINDS = SCOPE_ALIASES["moe"]
+
+
+def scope_matches(scope: str, kind: str) -> bool:
+    """Whether a spec scope covers a block kind (alias, exact, or glob)."""
+    if scope in SCOPE_ALIASES:
+        return kind in SCOPE_ALIASES[scope]
+    if any(ch in scope for ch in "*?["):
+        return fnmatch.fnmatchcase(kind, scope)
+    return scope == kind
+
+
+def _validate_scope(scope: str) -> str:
+    if scope in SCOPE_ALIASES or scope in BLOCK_KINDS:
+        return scope
+    if any(ch in scope for ch in "*?["):
+        if any(fnmatch.fnmatchcase(k, scope) for k in BLOCK_KINDS):
+            return scope
+        raise ValueError(
+            f"checkpoint-plan scope pattern {scope!r} matches no block kind; "
+            f"kinds: {BLOCK_KINDS}")
+    raise ValueError(
+        f"unknown checkpoint-plan scope {scope!r}; known kinds "
+        f"{BLOCK_KINDS}, aliases {tuple(SCOPE_ALIASES)}, or a glob pattern")
+
+
+def kind_tags(kind: str) -> tuple[str, ...]:
+    """Tags actually materialized in a block kind — mirrors the ``tag(...)``
+    call sites in ``models/`` plus the MoE/SSM internal residuals.  Drives
+    scope semantics, the group-vs-per-kind policy choice, and the static
+    estimator."""
+    if kind in ("mlstm", "slstm"):
+        return (SSM_STATE,)
+    if kind == "hymba":
+        return (QKV, ATTN_OUT, SSM_STATE, FFN_A, FFN_B, FFN_YSWI)
+    if kind.endswith("moe"):
+        return (QKV, ATTN_OUT, MOE_GATES)
+    return (QKV, ATTN_OUT, FFN_A, FFN_B, FFN_YSWI)
+
+
+# ---------------------------------------------------------------------------
+# CheckpointPlan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CheckpointPlan:
+    """A per-tag, per-block-kind activation-checkpoint decision map.
+
+    ``saved`` is the default-scope save set (every tag not listed is
+    ``recompute``); ``overrides`` are explicit scoped decisions
+    ``(scope, tag, decision)`` applied in order (later wins) on top of the
+    default for the block kinds the scope matches.  ``special`` marks the two
+    policies not expressible as tag sets (``full``, ``dots``).  Frozen and
+    hashable, so plans ride through jit static arguments and dict keys."""
+
+    saved: tuple[str, ...] = ()
+    overrides: tuple[tuple[str, str, str], ...] = ()
+    name: str = ""
+    special: str = ""               # "" | "full" | "dots"
+
+    def __post_init__(self):
+        if self.special not in ("", "full", "dots"):
+            raise ValueError(f"unknown special policy {self.special!r}")
+        if self.special and self.saved:
+            raise ValueError(
+                f"special policy {self.special!r} cannot carry a default "
+                "save set (its save decisions are not tag-based); scoped "
+                "overrides are allowed and reach the MoE custom VJP")
+        for t in self.saved:
+            if t not in CANON_TAGS:
+                raise ValueError(
+                    f"unknown checkpoint tag {t!r}; known: {CANON_TAGS}")
+        norm = tuple(t for t in CANON_TAGS if t in self.saved)
+        object.__setattr__(self, "saved", norm)
+        for scope, t, d in self.overrides:
+            _validate_scope(scope)
+            if t not in CANON_TAGS:
+                raise ValueError(
+                    f"unknown checkpoint tag {t!r}; known: {CANON_TAGS}")
+            if d not in _DECISIONS:
+                raise ValueError(
+                    f"unknown decision {d!r}; known: {_DECISIONS}")
+        # Dedupe identical (scope, tag, decision) triples keeping the LAST
+        # occurrence: decisions are last-match-wins, so dropping a repeated
+        # final directive in favour of its first occurrence would silently
+        # resurrect an intervening opposite decision.
+        seen, kept = set(), []
+        for item in reversed(self.overrides):
+            if item not in seen:
+                seen.add(item)
+                kept.append(item)
+        object.__setattr__(self, "overrides", tuple(reversed(kept)))
+
+    # -- decisions ----------------------------------------------------------
+
+    def decision(self, tag: str, kind: str | None = None) -> str:
+        """``save`` | ``recompute`` for a tag (in a block kind's scope)."""
+        if self.special == "full":
+            dec = SAVE
+        elif self.special == "dots":    # matmul outputs are what dots saves
+            dec = SAVE if tag in (FFN_A, FFN_B, ATTN_OUT, QKV) else RECOMPUTE
+        else:
+            dec = SAVE if tag in self.saved else RECOMPUTE
+        if kind is not None:
+            for scope, t, d in self.overrides:
+                if t == tag and scope_matches(scope, kind):
+                    dec = d
+        return dec
+
+    def override_for(self, tag: str, kinds: tuple[str, ...]) -> str | None:
+        """The explicit scoped decision for ``tag`` over any of ``kinds``
+        (last matching override wins), or None when the plan leaves it to
+        the default scope / legacy config aliases."""
+        dec = None
+        for scope, t, d in self.overrides:
+            if t == tag and any(scope_matches(scope, k) for k in kinds):
+                dec = d
+        return dec
+
+    def scoped_saved(self, kind: str) -> tuple[str, ...]:
+        """The effective save set for one block kind."""
+        return tuple(t for t in CANON_TAGS
+                     if self.decision(t, kind) == SAVE)
+
+    # -- rendering ----------------------------------------------------------
+
+    def spec(self) -> str:
+        """Canonical spec string; ``parse_plan(p.spec()) == p``."""
+        if self.name:
+            return self.name
+        head = self.special or "save=" + ",".join(self.saved)
+        segs = [head]
+        segs += [f"{scope}:{d}={t}" for scope, t, d in self.overrides]
+        return ";".join(segs)
+
+    def __str__(self) -> str:                   # pragma: no cover - trivial
+        return self.spec()
+
+    # -- estimation + budget fit -------------------------------------------
+
+    def estimate_saved_bytes(self, cfg, n_tokens: int, *,
+                             batch: int = 1) -> int | None:
+        """Static activation-residual estimate for the whole stack
+        (``cfg.num_groups`` scanned groups), from shapes + decisions alone.
+        ``batch`` (the sequence count inside ``n_tokens``) only refines the
+        SSM_STATE carry-snapshot floor — all other tags scale with tokens.
+        Returns ``None`` for the special policies (``full``, ``dots``) —
+        they are not expressible as tag sets."""
+        if self.special:
+            return None
+        total = 0
+        for kind, sizes in tag_bytes_by_kind(cfg, n_tokens, batch=batch):
+            saved = self.scoped_saved(kind)
+            total += sum(sizes[t] for t in kind_tags(kind) if t in saved)
+        return cfg.num_groups * total
+
+    @classmethod
+    def fit(cls, cfg, n_tokens: int, hbm_budget: int, *, batch: int = 1,
+            candidates: list["CheckpointPlan"] | None = None,
+            prefer: "CheckpointPlan | None" = None) -> "FitResult":
+        """Budget-driven auto-selection: walk candidate plans through
+        :meth:`estimate_saved_bytes` and pick the cheapest-recompute plan
+        (the one saving the *most* residual bytes) whose residuals fit under
+        ``hbm_budget`` bytes.
+
+        ``candidates`` defaults to the estimable registry plans; ``prefer``
+        (e.g. an explicit ``--remat-policy`` spec next to ``--hbm-budget``)
+        is tried first and wins whenever it fits.  When nothing fits, the
+        least-saving candidate is chosen — the budget is a target, not a
+        hard guarantee, and the caller can read ``fits`` off the table."""
+        if candidates is None:
+            candidates = [p for p in PLAN_REGISTRY.values() if not p.special]
+        rows = [(p, p.estimate_saved_bytes(cfg, n_tokens, batch=batch))
+                for p in candidates]
+        rows = [(p, e) for p, e in rows if e is not None]
+        if not rows:
+            raise ValueError("no estimable candidate plans to fit")
+        rows.sort(key=lambda pe: -pe[1])
+        if prefer is not None:
+            e = prefer.estimate_saved_bytes(cfg, n_tokens, batch=batch)
+            if e is None:
+                raise ValueError(
+                    f"preferred plan {prefer.spec()!r} is not statically "
+                    "estimable and cannot enter a budget fit")
+            rows = [(prefer, e)] + [r for r in rows if r[0] != prefer]
+        chosen = next((p for p, e in rows if e <= hbm_budget), None)
+        if chosen is None:
+            chosen = min(rows, key=lambda pe: pe[1])[0]
+        table = tuple(
+            FitRow(spec=p.spec(), est_saved_bytes=int(e),
+                   fits=e <= hbm_budget, chosen=p == chosen)
+            for p, e in rows)
+        return FitResult(plan=chosen, budget_bytes=int(hbm_budget),
+                         table=table)
+
+
+@dataclass(frozen=True)
+class FitRow:
+    spec: str
+    est_saved_bytes: int
+    fits: bool
+    chosen: bool
+
+
+@dataclass(frozen=True)
+class FitResult:
+    """Outcome of :meth:`CheckpointPlan.fit` — the chosen plan plus the full
+    decision table (every candidate's estimate and fit verdict)."""
+
+    plan: CheckpointPlan
+    budget_bytes: int
+    table: tuple[FitRow, ...]
+
+    @property
+    def resolved(self) -> "ResolvedPlan":
+        return ResolvedPlan(self.plan, "fit")
+
+
+# ---------------------------------------------------------------------------
+# Registry + spec parser
+# ---------------------------------------------------------------------------
+
+PLAN_REGISTRY: dict[str, CheckpointPlan] = {
+    # Save nothing; recompute the whole layer in backward (max saving).
+    "none": CheckpointPlan(name="none"),
     # Paper policy: save the GEMM outputs (A, B, attention projections) and
     # Y_swi (Algorithm 1 line 11); recompute all other elementwise work.
-    "paper": (FFN_A, FFN_B, FFN_YSWI, ATTN_OUT, QKV),
+    "paper": CheckpointPlan(
+        saved=(FFN_A, FFN_B, FFN_YSWI, ATTN_OUT, QKV), name="paper"),
     # Beyond-paper: also drop Y_swi (recompute SiLU(A)·B in backward).
-    "paper_min": (FFN_A, FFN_B, ATTN_OUT, QKV),
-}
-
-POLICIES = {
-    # Save nothing; recompute the whole layer in backward (max memory saving).
-    "none": cp.nothing_saveable,
-    # Save everything (baseline — what plain autodiff of a scanned layer does).
-    "full": cp.everything_saveable,
+    "paper_min": CheckpointPlan(
+        saved=(FFN_A, FFN_B, ATTN_OUT, QKV), name="paper_min"),
+    # Save everything (what plain autodiff of a scanned layer does).
+    "full": CheckpointPlan(name="full", special="full"),
     # Classic: save all matmul outputs.
-    "dots": cp.dots_with_no_batch_dims_saveable,
-    "paper": cp.save_only_these_names(*POLICY_TAGS["paper"]),
-    "paper_min": cp.save_only_these_names(*POLICY_TAGS["paper_min"]),
+    "dots": CheckpointPlan(name="dots", special="dots"),
 }
 
 
-def apply_policy(fn, policy: str, prevent_cse: bool = False):
-    """Wrap a layer function with the named checkpoint policy."""
-    if policy == "full":
+def plan_order() -> tuple[str, ...]:
+    """Registry plan names ordered by how much they save: tag plans by
+    ascending save-set size, then the special policies.  The bench suites'
+    sweep order (``repro.bench.memory.POLICY_ORDER``) derives from this."""
+    tags = sorted((p for p in PLAN_REGISTRY.values() if not p.special),
+                  key=lambda p: (len(p.saved), p.name))
+    spec = sorted((p for p in PLAN_REGISTRY.values() if p.special),
+                  key=lambda p: p.name)
+    return tuple(p.name for p in tags + spec)
+
+
+@lru_cache(maxsize=None)
+def parse_plan(spec: str) -> CheckpointPlan:
+    """Parse a plan spec (or registry name) to a :class:`CheckpointPlan`.
+
+    Grammar: ``spec := segment (';' segment)*``;
+    ``segment := [scope ':'] ('save'|'recompute') '=' tag (',' tag)*``, or a
+    bare registry name as a *seed* segment — ``"paper;moe:recompute=
+    ffn_yswi"`` starts from the paper save set, ``"full;moe:recompute=
+    ffn_a,ffn_b"`` keeps save-everything for the scanned stack while
+    shrinking the MoE custom-VJP residuals.  Unscoped ``save``/``recompute``
+    segments build the default save set (starting empty — all-recompute);
+    scoped segments become per-kind overrides.  Raises ``ValueError`` on
+    anything unknown."""
+    if not isinstance(spec, str):
+        raise ValueError(f"checkpoint plan spec must be a str, got {spec!r}")
+    if spec in PLAN_REGISTRY:
+        return PLAN_REGISTRY[spec]
+    if "=" not in spec and ";" not in spec:
+        raise ValueError(
+            f"unknown checkpoint plan {spec!r}: not a registered name "
+            f"({tuple(PLAN_REGISTRY)}) and not a spec "
+            "('[scope:]save|recompute=tag,...' segments joined by ';')")
+    saved: list[str] = []
+    overrides: list[tuple[str, str, str]] = []
+    special = ""
+    for seg in spec.split(";"):
+        seg = seg.strip()
+        if not seg:
+            continue
+        if "=" not in seg:                      # seed segment: registry name
+            if seg not in PLAN_REGISTRY:
+                raise ValueError(
+                    f"bad plan segment {seg!r}: not a registry name "
+                    f"({tuple(PLAN_REGISTRY)}) and not "
+                    "'[scope:]save|recompute=tag,...'")
+            seed = PLAN_REGISTRY[seg]
+            if seed.special:
+                special = seed.special
+            for t in seed.saved:
+                if t not in saved:
+                    saved.append(t)
+            continue
+        head, _, tail = seg.partition("=")
+        scope = None
+        directive = head.strip()
+        if ":" in directive:
+            scope, _, directive = directive.partition(":")
+            scope = _validate_scope(scope.strip())
+            directive = directive.strip()
+        if directive not in _DECISIONS:
+            raise ValueError(
+                f"bad plan segment {seg!r}: directive {directive!r} "
+                f"not in {_DECISIONS}")
+        tags = [t.strip() for t in tail.split(",") if t.strip()]
+        for t in tags:
+            if t not in CANON_TAGS:
+                raise ValueError(
+                    f"bad plan segment {seg!r}: unknown tag {t!r}; "
+                    f"known: {CANON_TAGS}")
+            if scope is None:
+                if directive == SAVE and t not in saved:
+                    saved.append(t)
+                elif directive == RECOMPUTE and t in saved:
+                    saved.remove(t)
+            else:
+                overrides.append((scope, t, directive))
+    return CheckpointPlan(saved=tuple(saved), overrides=tuple(overrides),
+                          special=special)
+
+
+def get_plan(name_or_spec) -> CheckpointPlan:
+    """Registry name, spec string, plan, or resolved plan ->
+    :class:`CheckpointPlan`."""
+    if isinstance(name_or_spec, ResolvedPlan):
+        return name_or_spec.plan
+    if isinstance(name_or_spec, CheckpointPlan):
+        return name_or_spec
+    return parse_plan(name_or_spec)
+
+
+# ---------------------------------------------------------------------------
+# Resolution (provenance discipline mirrors core/gmm_backend.resolve)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ResolvedPlan:
+    """A concrete plan choice with provenance: which precedence slot won
+    (``arg`` | ``config`` | ``default`` | ``fit``).  ``spec`` is the
+    canonical rendering — what BENCH records, dryrun output, and train
+    ``step_hook`` metrics stamp."""
+
+    plan: CheckpointPlan
+    source: str
+
+    @property
+    def spec(self) -> str:
+        return self.plan.spec()
+
+    def __str__(self) -> str:                   # pragma: no cover - trivial
+        return self.spec
+
+
+def resolve_plan(policy: "str | CheckpointPlan | ResolvedPlan | None" = None,
+                 *, config: "str | None" = None) -> ResolvedPlan:
+    """Resolve a checkpoint-plan request to a :class:`ResolvedPlan`.
+
+    Precedence: ``policy`` call-site argument > ``config`` (the
+    ``ModelConfig.remat_policy`` field, name or spec) > the ``"none"``
+    default.  A ``ResolvedPlan`` passed as ``policy`` is returned unchanged
+    (already resolved upstream)."""
+    if isinstance(policy, ResolvedPlan):
+        return policy
+    for source, cand in (("arg", policy), ("config", config)):
+        if cand is None or cand in ("", "auto"):
+            continue
+        return ResolvedPlan(get_plan(cand), source)
+    return ResolvedPlan(PLAN_REGISTRY["none"], "default")
+
+
+# ---------------------------------------------------------------------------
+# Execution: jax.checkpoint policies from plans
+# ---------------------------------------------------------------------------
+
+
+def _names_policy(tags: tuple[str, ...]):
+    return cp.save_only_these_names(*tags) if tags else cp.nothing_saveable
+
+
+def _flat_policy(plan: CheckpointPlan):
+    """The scope-blind policy object (default-scope decisions only)."""
+    if plan.special == "full":
+        return cp.everything_saveable
+    if plan.special == "dots":
+        return cp.dots_with_no_batch_dims_saveable
+    return _names_policy(plan.saved)
+
+
+def plan_policies(plan: CheckpointPlan, block_pattern: tuple[str, ...]):
+    """How to apply a plan to a scanned group of ``block_pattern`` sublayers.
+
+    Returns ``(mode, payload)``:
+
+      * ``("full", None)`` — no remat wrap at all;
+      * ``("group", policy)`` — one ``jax.checkpoint`` around the whole
+        group.  Chosen whenever no tag is decided differently in two kinds
+        that both materialize it — then the union name set is *exactly*
+        equivalent to per-kind application (tags are kind-unique otherwise),
+        and for uniform named plans it is bit-identical to the legacy string
+        path;
+      * ``("per_kind", {kind: policy})`` — the plan scopes a shared tag
+        (e.g. QKV saved in ``attn_ffn`` but recomputed in ``attn_moe``)
+        differently across kinds present in the pattern: each sublayer gets
+        its own ``jax.checkpoint`` with its kind's scoped policy.
+    """
+    if plan.special == "full":
+        return "full", None
+    if plan.special == "dots":
+        return "group", cp.dots_with_no_batch_dims_saveable
+    per_kind = {k: tuple(t for t in kind_tags(k)
+                         if t in plan.scoped_saved(k))
+                for k in dict.fromkeys(block_pattern)}
+    decided: dict[str, bool] = {}
+    conflict = False
+    for k, saved in per_kind.items():
+        for t in kind_tags(k):
+            d = t in saved
+            if decided.setdefault(t, d) != d:
+                conflict = True
+    if not conflict:
+        union = tuple(t for t in CANON_TAGS
+                      if any(t in s for s in per_kind.values()))
+        return "group", _names_policy(union)
+    return "per_kind", {k: _names_policy(s) for k, s in per_kind.items()}
+
+
+def apply_policy(fn, policy, prevent_cse: bool = False):
+    """Wrap a layer function with a named/spec plan's *default-scope* policy
+    (legacy helper; ``models/transformer.py`` uses :func:`plan_policies` for
+    scope-aware application)."""
+    plan = resolve_plan(policy).plan
+    if plan.special == "full":
         return fn
-    return jax.checkpoint(fn, policy=POLICIES[policy], prevent_cse=prevent_cse)
+    return jax.checkpoint(fn, policy=_flat_policy(plan),
+                          prevent_cse=prevent_cse)
 
 
 def tag(x, name: str):
     return checkpoint_name(x, name)
 
 
-def tag_bytes_per_group(cfg, n_tokens: int) -> dict:
-    """Bytes of each tagged tensor per scanned layer group, from shapes alone.
+# ---------------------------------------------------------------------------
+# MoE custom-VJP residual mode
+# ---------------------------------------------------------------------------
 
-    Mirrors the ``tag(...)`` call sites in ``models/``: the q projection
-    (QKV), the attention output projection (ATTN_OUT), the dense-FFN GEMM
-    outputs and SwiGLU product (FFN_A/B/YSWI — the MoE expert FFN manages its
-    own residuals inside the custom VJP), and the router top-k weights
-    (MOE_GATES)."""
+#: residual modes of the MoE custom VJP (see core/moe_layer.py):
+#:   ab_yswi — save A, B and Y_swi (paper-faithful Algorithm 1 line 11);
+#:   ab      — save A, B; recompute Y_swi = SiLU(A)·B in backward;
+#:   x       — save neither: recompute A, B (two extra grouped GEMMs) and
+#:             Y_swi from the unpermuted input in backward (max saving).
+MOE_RESIDUAL_MODES = ("ab_yswi", "ab", "x")
+
+
+def moe_residual_mode(cfg) -> str:
+    """The MoE custom-VJP residual set under ``cfg``'s resolved plan.
+
+    Only *explicit* ``moe``-scoped decisions override the deprecated
+    ``cfg.save_yswi`` alias — the default (unscoped) save set governs the
+    checkpoint-name remat of the scanned layer, never the hand-written VJP,
+    so legacy configs keep their exact behavior.  FFN_A/FFN_B are coupled
+    residuals in the VJP (both sides of the SwiGLU first layer); deciding
+    them apart raises."""
+    plan = resolve_plan(config=cfg.remat_policy).plan
+    oa = plan.override_for(FFN_A, MOE_SCOPE_KINDS)
+    ob = plan.override_for(FFN_B, MOE_SCOPE_KINDS)
+    oy = plan.override_for(FFN_YSWI, MOE_SCOPE_KINDS)
+    if oa != ob:
+        raise ValueError(
+            "FFN_A and FFN_B are coupled residuals in the MoE custom VJP; "
+            f"plan {plan.spec()!r} decides them apart "
+            f"(ffn_a={oa}, ffn_b={ob})")
+    save_ab = oa != RECOMPUTE                   # default: save (paper)
+    save_y = cfg.save_yswi if oy is None else oy == SAVE
+    if not save_ab:
+        if oy == SAVE:
+            raise ValueError(
+                "FFN_YSWI cannot be saved while FFN_A/FFN_B are recomputed "
+                f"in the MoE scope (plan {plan.spec()!r}): the backward "
+                "needs A and B regardless, so saving Y_swi is pure waste")
+        return "x"
+    return "ab_yswi" if save_y else "ab"
+
+
+# ---------------------------------------------------------------------------
+# Static byte accounting
+# ---------------------------------------------------------------------------
+
+#: chunk sizes of the recurrent scans in models/ssm.py — one f32 carry
+#: snapshot survives per chunk under autodiff of the lax.scan.
+_SSM_SCAN_CHUNK = {"mlstm": 256, "slstm": 1024, "hymba": 256}
+
+
+def _ssm_state_bytes(cfg, kind: str, n_tokens: int, batch: int = 1) -> int:
+    """SSM_STATE bytes per scanned group: the per-chunk carry snapshots of
+    the recurrent scans (always f32, independent of ``cfg.dtype``).  The
+    scans clamp ``chunk = min(chunk, S)``, so even a sub-chunk sequence
+    holds one carry per batch row — ``batch`` is the snapshot floor."""
+    snaps = max(n_tokens // _SSM_SCAN_CHUNK[kind], batch, 1)
+    if kind == "mlstm":
+        H = cfg.num_heads
+        dhh = 2 * cfg.d_model // H
+        elems = H * (dhh * dhh + dhh + 1)       # C (D,D) + n (D,) + m ()
+    elif kind == "slstm":
+        elems = 3 * cfg.d_model                 # c, n, m
+    else:                                       # hymba mamba heads
+        elems = cfg.ssm_heads * cfg.resolved_head_dim * cfg.ssm_state
+    return snaps * elems * 4
+
+
+def tag_bytes_by_kind(cfg, n_tokens: int, *,
+                      batch: int = 1) -> tuple[tuple[str, dict], ...]:
+    """Bytes of each tagged tensor per block-pattern slot, from shapes alone.
+
+    One ``(kind, {tag: bytes})`` per entry of ``cfg.block_pattern``, mirroring
+    the ``tag(...)`` call sites in ``models/``: the q projection (QKV), the
+    attention output projection (ATTN_OUT), the dense-FFN GEMM outputs and
+    SwiGLU product (FFN_A/B/YSWI — the MoE expert FFN manages its own
+    residuals inside the custom VJP), the router top-k weights (MOE_GATES),
+    and the recurrent-scan carry snapshots (SSM_STATE) of the ssm/hybrid
+    kinds."""
     import jax.numpy as jnp
 
     item = jnp.dtype(cfg.dtype).itemsize
-    sizes = dict.fromkeys(
-        (FFN_A, FFN_B, FFN_YSWI, ATTN_OUT, QKV, MOE_GATES), 0)
+    out = []
     for kind in cfg.block_pattern:
+        sizes = dict.fromkeys(CANON_TAGS, 0)
         has_attn = "attn" in kind or kind == "hymba"
         if has_attn:
-            sizes[QKV] += n_tokens * cfg.num_heads * cfg.resolved_head_dim
-            sizes[ATTN_OUT] += n_tokens * cfg.d_model
+            sizes[QKV] = n_tokens * cfg.num_heads * cfg.resolved_head_dim
+            sizes[ATTN_OUT] = n_tokens * cfg.d_model
         if kind.endswith("moe"):
-            sizes[MOE_GATES] += n_tokens * cfg.top_k
-        elif has_attn:                     # dense FFN sublayer
+            sizes[MOE_GATES] = n_tokens * cfg.top_k
+        elif has_attn:                          # dense FFN sublayer
             n = 3 if cfg.ffn_act == "swiglu" else 1
             for t in (FFN_A, FFN_B, FFN_YSWI)[:n]:
-                sizes[t] += n_tokens * cfg.d_ff
-    return {t: b * item for t, b in sizes.items()}
+                sizes[t] = n_tokens * cfg.d_ff
+        sizes = {t: b * item for t, b in sizes.items()}
+        if kind in _SSM_SCAN_CHUNK:
+            sizes[SSM_STATE] = _ssm_state_bytes(cfg, kind, n_tokens, batch)
+        out.append((kind, sizes))
+    return tuple(out)
 
 
-def estimate_saved_bytes(cfg, policy: str, n_tokens: int) -> int | None:
-    """Static activation-residual estimate for a name-based policy, whole
-    stack (``num_groups`` scanned groups).  Returns ``None`` for policies not
-    expressible as tag sets (``full``, ``dots``)."""
-    if policy not in POLICY_TAGS:
-        return None
-    per_group = tag_bytes_per_group(cfg, n_tokens)
-    tags = POLICY_TAGS[policy]
-    return cfg.num_groups * sum(per_group[t] for t in tags)
+def tag_bytes_per_group(cfg, n_tokens: int, *, batch: int = 1) -> dict:
+    """Summed-over-pattern view of :func:`tag_bytes_by_kind` (back-compat)."""
+    totals = dict.fromkeys(CANON_TAGS, 0)
+    for _, sizes in tag_bytes_by_kind(cfg, n_tokens, batch=batch):
+        for t, b in sizes.items():
+            totals[t] += b
+    return totals
+
+
+def estimate_saved_bytes(cfg, policy, n_tokens: int, *,
+                         batch: int = 1) -> int | None:
+    """Static activation-residual estimate for a plan (name, spec, or
+    object), whole stack.  Returns ``None`` for plans not expressible as tag
+    sets (``full``, ``dots``).  Thin wrapper over
+    :meth:`CheckpointPlan.estimate_saved_bytes`."""
+    return resolve_plan(policy).plan.estimate_saved_bytes(cfg, n_tokens,
+                                                          batch=batch)
+
+
+def parse_size(s: "str | int | float") -> int:
+    """Parse a byte size: plain numbers or ``KiB/MiB/GiB/KB/MB/GB`` suffixes
+    (``--hbm-budget 3.5GiB``)."""
+    if isinstance(s, (int, float)):
+        return int(s)
+    t = s.strip().lower()
+    units = {"kib": 2**10, "mib": 2**20, "gib": 2**30,
+             "kb": 1e3, "mb": 1e6, "gb": 1e9, "b": 1}
+    for suf, mul in units.items():
+        if t.endswith(suf):
+            return int(float(t[:-len(suf)]) * mul)
+    return int(float(t))
+
+
+# ---------------------------------------------------------------------------
+# Deprecated string-policy views (derived from the registry, never drifting)
+# ---------------------------------------------------------------------------
+
+#: tag sets per name-based policy (deprecated alias of the registry).
+POLICY_TAGS = {n: p.saved for n, p in PLAN_REGISTRY.items() if not p.special}
+
+#: jax.checkpoint policy objects per registry name (deprecated alias).
+POLICIES = {n: _flat_policy(p) for n, p in PLAN_REGISTRY.items()}

@@ -16,10 +16,18 @@ Backward (paper §3.2 + Algorithm 1): a custom VJP that
      the (L·k, d) routed buffer,
   4. accumulates token gradients with a scatter-add over the index list.
 
-Residuals saved: ``A``, ``B`` (the two first-layer GEMM outputs) and —
-faithful to Algorithm 1 line 11 — ``Y_swi``.  ``save_yswi=False`` is the
-beyond-paper variant that recomputes ``Y_swi = SiLU(A)·B`` in the backward as
-well, trading one elementwise multiply for another (L·k, h) buffer.
+The residual set is a per-plan decision (``repro.core.checkpoint``
+``moe``-scoped tags), expressed as one of three modes:
+
+  * ``"ab_yswi"`` — save ``A``, ``B`` (the two first-layer GEMM outputs)
+    and, faithful to Algorithm 1 line 11, ``Y_swi``;
+  * ``"ab"``      — recompute ``Y_swi = SiLU(A)·B`` in the backward as well,
+    trading one elementwise multiply for an (L·k, h) buffer (the legacy
+    ``save_yswi=False``);
+  * ``"x"``       — save neither: the backward re-runs the two first-layer
+    grouped GEMMs from the (recomputed) input gather, trading two grouped
+    GEMMs for *both* (L·k, h) buffers — the deepest-recompute point a
+    ``moe:recompute=ffn_a,ffn_b`` plan can ask for.
 
 The grouped GEMMs go through the pluggable backend registry in
 ``repro.core.gmm_backend`` (``ragged`` = ``jax.lax.ragged_dot[_general]``
@@ -35,6 +43,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.checkpoint import MOE_RESIDUAL_MODES
 from repro.core.gmm_backend import ResolvedBackend, gmm, gmm_dw, resolve
 from repro.core.routing import Dispatch
 
@@ -72,14 +81,14 @@ def _gate_per_slot(gates: jax.Array, token_index_map: jax.Array,
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _moe_swiglu(save_yswi: bool, backend: str, x, w1, w2, w3, gates,
+def _moe_swiglu(residuals: str, backend: str, x, w1, w2, w3, gates,
                 eti, off, tim, lens):
-    y, _ = _moe_swiglu_fwd(save_yswi, backend, x, w1, w2, w3, gates,
+    y, _ = _moe_swiglu_fwd(residuals, backend, x, w1, w2, w3, gates,
                            eti, off, tim, lens)
     return y
 
 
-def _moe_swiglu_fwd(save_yswi, backend, x, w1, w2, w3, gates,
+def _moe_swiglu_fwd(residuals, backend, x, w1, w2, w3, gates,
                     eti, off, tim, lens):
     del off
     L = x.shape[0]
@@ -94,13 +103,23 @@ def _moe_swiglu_fwd(save_yswi, backend, x, w1, w2, w3, gates,
     # Combine: gather each token's k partials and contract with its gates.
     parts = jnp.take(p_out, tim.reshape(-1), axis=0).reshape(L, k, -1)
     y = jnp.einsum("lk,lkd->ld", gates.astype(parts.dtype), parts)
+    save_ab = residuals != "x"
     res = (x, w1, w2, w3, gates, eti, tim, lens, g_slot,
-           a, b, y_swi if save_yswi else None)
+           a if save_ab else None, b if save_ab else None,
+           y_swi if residuals == "ab_yswi" else None)
     return y, res
 
 
-def _moe_swiglu_bwd(save_yswi, backend, res, dy):
+def _moe_swiglu_bwd(residuals, backend, res, dy):
+    del residuals                   # the residual tuple itself encodes it
     (x, w1, w2, w3, gates, eti, tim, lens, g_slot, a, b, y_swi) = res
+    if a is None:
+        # Deepest recompute ("x"): re-run the two first-layer grouped GEMMs
+        # from the recomputed input gather (Algorithm 1 with lines 9-10
+        # replayed in backward).
+        xg0 = jnp.take(x, eti, axis=0)
+        a = gmm(xg0, w1, lens, backend=backend)
+        b = gmm(xg0, w2, lens, backend=backend)
     if y_swi is None:
         y_swi = _silu(a) * b                           # beyond-paper recompute
     # 1. Expert-summation backward: expand (L, d) grads to the slots via the
@@ -136,13 +155,16 @@ _moe_swiglu.defvjp(_moe_swiglu_fwd, _moe_swiglu_bwd)
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _moe_mlp(act: str, backend: str, x, w1, w3, gates, eti, off, tim, lens):
-    y, _ = _moe_mlp_fwd(act, backend, x, w1, w3, gates, eti, off, tim, lens)
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _moe_mlp(act: str, backend: str, residuals: str,
+             x, w1, w3, gates, eti, off, tim, lens):
+    y, _ = _moe_mlp_fwd(act, backend, residuals, x, w1, w3, gates,
+                        eti, off, tim, lens)
     return y
 
 
-def _moe_mlp_fwd(act, backend, x, w1, w3, gates, eti, off, tim, lens):
+def _moe_mlp_fwd(act, backend, residuals, x, w1, w3, gates,
+                 eti, off, tim, lens):
     del off
     f, _ = _ACTS[act]
     L, k = tim.shape[0], tim.shape[1]
@@ -152,13 +174,18 @@ def _moe_mlp_fwd(act, backend, x, w1, w3, gates, eti, off, tim, lens):
     p_out = gmm(f(a), w3, lens, backend=backend)
     parts = jnp.take(p_out, tim.reshape(-1), axis=0).reshape(L, k, -1)
     y = jnp.einsum("lk,lkd->ld", gates.astype(parts.dtype), parts)
-    # Smart checkpoint: save only the GEMM output `a`; act(a) is recomputed.
-    return y, (x, w1, w3, gates, eti, tim, lens, g_slot, a)
+    # Smart checkpoint: save only the GEMM output `a` (or, under a
+    # moe:recompute=ffn_a plan, not even that); act(a) is always recomputed.
+    return y, (x, w1, w3, gates, eti, tim, lens, g_slot,
+               a if residuals != "x" else None)
 
 
-def _moe_mlp_bwd(act, backend, res, dy):
+def _moe_mlp_bwd(act, backend, residuals, res, dy):
+    del residuals
     f, df = _ACTS[act]
     (x, w1, w3, gates, eti, tim, lens, g_slot, a) = res
+    if a is None:                   # "x": replay the first-layer grouped GEMM
+        a = gmm(jnp.take(x, eti, axis=0), w1, lens, backend=backend)
     fa = f(a)                                          # recompute (paper §5.2)
     dyg = jnp.take(dy, eti, axis=0)
     dw3 = gmm_dw(fa * g_slot[:, None].astype(fa.dtype), dyg, lens,
@@ -183,10 +210,16 @@ _moe_mlp.defvjp(_moe_mlp_fwd, _moe_mlp_bwd)
 # ---------------------------------------------------------------------------
 
 
+#: custom-VJP residual modes (see module docstring) — the single source of
+#: truth lives next to the plan logic in ``repro.core.checkpoint``.
+RESIDUAL_MODES = MOE_RESIDUAL_MODES
+
+
 def moe_ffn_blaze(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
                   w1: jax.Array, w3: jax.Array, w2: jax.Array | None = None,
                   *, activation: str = "swiglu",
                   save_yswi: bool = True,
+                  residuals: str | None = None,
                   backend: str | ResolvedBackend | None = None) -> jax.Array:
     """MoEBlaze expert FFN.
 
@@ -198,22 +231,32 @@ def moe_ffn_blaze(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
       w2: (E, d, h) gate-branch projection (SwiGLU only).
       w3: (E, h, d) down projection.
       activation: "swiglu" | "silu" | "relu" | "gelu".
-      save_yswi: paper-faithful (True) saves Y_swi; False recomputes it.
+      save_yswi: deprecated bool alias — paper-faithful (True) saves Y_swi;
+        ignored when ``residuals`` is given.
+      residuals: custom-VJP residual mode, "ab_yswi" | "ab" | "x" — usually
+        derived from the checkpoint plan via
+        ``repro.core.checkpoint.moe_residual_mode(cfg)``.  None falls back
+        to the ``save_yswi`` alias.
       backend: grouped-GEMM backend — a name ("ragged" | "segment" |
         "pallas"), an upstream ``ResolvedBackend``, or None/"auto" to walk
         the full precedence chain (``use_backend`` context, then
         ``REPRO_GMM_BACKEND``, then auto).
     """
+    if residuals is None:
+        residuals = "ab_yswi" if save_yswi else "ab"
+    if residuals not in RESIDUAL_MODES:
+        raise ValueError(f"unknown residual mode {residuals!r}; "
+                         f"known: {RESIDUAL_MODES}")
     # Resolve to a concrete name here so the custom-VJP static arg is a
     # stable hashable and the precedence chain is walked at trace time.
     backend = resolve(backend).name
     d = dispatch
     if activation == "swiglu":
         assert w2 is not None
-        return _moe_swiglu(save_yswi, backend, x, w1, w2, w3, gates,
+        return _moe_swiglu(residuals, backend, x, w1, w2, w3, gates,
                            d.expert_token_indices, d.expert_token_offsets,
                            d.token_index_map, d.expert_lengths)
     assert w2 is None or activation == "swiglu"
-    return _moe_mlp(activation, backend, x, w1, w3, gates,
+    return _moe_mlp(activation, backend, residuals, x, w1, w3, gates,
                     d.expert_token_indices, d.expert_token_offsets,
                     d.token_index_map, d.expert_lengths)

@@ -14,6 +14,16 @@ every MoE lowering in the run — e.g. ``--gmm-backend segment`` probes the
 portable path, ``ragged`` the XLA fast path on newer JAX.  ``--moe-parallel``
 pins the MoE distribution mode (auto | ep | ep_a2a | tp) for every lowering —
 both the weight PartitionSpecs and the shard_map execution path follow it.
+
+``--remat-policy`` pins the activation-checkpoint plan (a registry name or a
+``repro.core.checkpoint`` spec like ``"save=ffn_a,ffn_b,qkv"``);
+``--hbm-budget BYTES`` (suffixes ``KiB/MiB/GiB`` accepted; *per device*)
+engages ``CheckpointPlan.fit`` instead — the cheapest-recompute plan whose
+estimated per-device live residuals fit the budget is selected per
+(arch x shape), with an explicit ``--remat-policy`` as the preferred
+candidate.  Every record stamps the
+resolved plan (``remat_plan``/``remat_plan_source``, plus the ``remat_fit``
+decision table under a budget).
 """
 
 import os
@@ -183,7 +193,9 @@ def _compile_once(arch, shape_name, mesh, cfg_overrides, shape=None,
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             cfg_overrides=None, verbose: bool = True,
-            cost_probe: bool = True, microbatches: int | None = None) -> dict:
+            cost_probe: bool = True, microbatches: int | None = None,
+            remat_policy: str | None = None,
+            hbm_budget: int | None = None) -> dict:
     """Dry-run one (arch x shape x mesh).
 
     The full scanned model is lowered+compiled (memory analysis, proof of
@@ -192,10 +204,43 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     probes (1 and 2 pattern-groups) and extrapolated linearly:
     ``full = B + (G-1)·(C-B)`` — exact for homogeneous layer stacks.
     """
+    import dataclasses
+
+    from repro.core import checkpoint as CK
     from repro.core.gmm_backend import resolve
     mesh = make_production_mesh(multi_pod=multi_pod)
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16"}
+    # Resolve the checkpoint plan up front (on the overridden config) so
+    # every lowering below — the main compile and the cost probes — runs the
+    # same baked plan spec.  The budget is *per device*: the fit estimates
+    # the residual set live on one device (global batch / data-parallel
+    # shards / gradient-accumulation microbatches).
+    cfg_overrides = dict(cfg_overrides or {})
+    cfg0 = get_config(arch).replace(**cfg_overrides)
+    prefer = CK.get_plan(remat_policy) if remat_policy else None
+    if hbm_budget is not None:
+        ishape = INPUT_SHAPES[shape_name]
+        n_dp = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                n_dp *= mesh.shape[a]
+        b_dev = max(ishape.global_batch // max(n_dp, 1), 1)
+        if ishape.kind == "train":
+            M = microbatches if microbatches is not None \
+                else _num_microbatches(ishape, mesh, cfg0)
+            b_dev = max(b_dev // M, 1)
+        fit = CK.CheckpointPlan.fit(
+            cfg0, b_dev * ishape.seq_len, hbm_budget, batch=b_dev,
+            prefer=prefer)
+        plan_r = fit.resolved
+        rec["remat_fit"] = [dataclasses.asdict(r) for r in fit.table]
+        rec["hbm_budget"] = fit.budget_bytes
+    else:
+        plan_r = CK.resolve_plan(remat_policy, config=cfg0.remat_policy)
+    cfg_overrides["remat_policy"] = plan_r.spec
+    rec["remat_plan"] = plan_r.spec
+    rec["remat_plan_source"] = plan_r.source
     out, skip, cfg = _compile_once(arch, shape_name, mesh, cfg_overrides,
                                    microbatches=microbatches)
     # Stamp the backend the lowering actually resolved (cfg at the config
@@ -269,6 +314,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     if verbose:
         print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+              f"plan={rec['remat_plan']} "
               f"args={rec['arg_bytes']/2**30:.2f}GiB "
               f"temp={rec['temp_bytes']/2**30:.2f}GiB "
               f"peak={rec['peak_bytes']/2**30:.2f}GiB/dev "
@@ -301,7 +347,22 @@ def main(argv=None):
                     choices=["auto", "ep", "ep_a2a", "tp"],
                     help="MoE distribution mode override (config field "
                          "moe_parallel; see README 'Distribution modes')")
+    ap.add_argument("--remat-policy", default=None,
+                    help="activation-checkpoint plan: registry name or spec "
+                         "('save=ffn_a,ffn_b,qkv;moe:recompute=ffn_yswi'); "
+                         "see README 'Activation checkpoint plans'")
+    ap.add_argument("--hbm-budget", default=None,
+                    help="per-device activation-residual budget (bytes; "
+                         "KiB/MiB/GiB suffixes ok) — budget-fit the "
+                         "checkpoint plan per (arch x shape) via "
+                         "CheckpointPlan.fit over the per-device live "
+                         "residual set; an explicit --remat-policy becomes "
+                         "the preferred candidate")
     args = ap.parse_args(argv)
+    from repro.core.checkpoint import get_plan, parse_size
+    if args.remat_policy:
+        get_plan(args.remat_policy)      # validate before any compile work
+    hbm_budget = parse_size(args.hbm_budget) if args.hbm_budget else None
     overrides = json.loads(args.override) if args.override else None
     if args.moe_parallel:
         overrides = dict(overrides or {}, moe_parallel=args.moe_parallel)
@@ -330,7 +391,9 @@ def main(argv=None):
                 rec = run_one(arch, shape, multi_pod=args.multi_pod,
                               cfg_overrides=overrides,
                               microbatches=args.microbatches,
-                              cost_probe=not args.no_probe)
+                              cost_probe=not args.no_probe,
+                              remat_policy=args.remat_policy,
+                              hbm_budget=hbm_budget)
                 if args.tag:
                     rec["tag"] = args.tag
             except Exception as e:  # noqa: BLE001 — report and continue

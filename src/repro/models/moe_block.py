@@ -37,7 +37,7 @@ from repro.compat import shard_map
 from repro.core import gmm_backend as GB
 from repro.core import routing
 from repro.core.baseline import moe_ffn_dense, moe_ffn_megablocks
-from repro.core.checkpoint import MOE_GATES, tag
+from repro.core.checkpoint import MOE_GATES, moe_residual_mode, tag
 from repro.core.moe_layer import moe_ffn_blaze
 from repro.models.common import dense_init
 
@@ -111,12 +111,24 @@ def _moe_dispatch(xf: jax.Array, p: dict, cfg, g, disp, rb, *,
                                   p.get("w2"), activation=cfg.ffn_act,
                                   backend=rb)
     if cfg.moe_impl == "blaze_pallas" and not sliced:
+        # The fused-Pallas composition has a fixed residual set; a plan
+        # whose moe-scoped overrides ask for a different one must fail
+        # loudly here, not be silently ignored.
+        mode = moe_residual_mode(cfg)
+        if mode != ("ab_yswi" if cfg.save_yswi else "ab"):
+            raise ValueError(
+                f"moe_impl='blaze_pallas' cannot honor the checkpoint "
+                f"plan's moe-scoped residual mode {mode!r} (the fused "
+                "kernels manage a fixed residual set); use "
+                "moe_impl='blaze' or drop the moe-scoped overrides")
         from repro.kernels.ops import moe_ffn_blaze_pallas
         return moe_ffn_blaze_pallas(xf, gates, disp, p["w1"], p["w3"],
                                     p["w2"], backend=rb)
+    # Residual set from the checkpoint plan's moe scope (the deprecated
+    # cfg.save_yswi bool is the fallback when the plan leaves it open).
     return moe_ffn_blaze(xf, gates, disp, p["w1"], p["w3"], p.get("w2"),
-                         activation=cfg.ffn_act, save_yswi=cfg.save_yswi,
-                         backend=rb)
+                         activation=cfg.ffn_act,
+                         residuals=moe_residual_mode(cfg), backend=rb)
 
 
 def _moe_local(xf: jax.Array, p: dict, cfg, backend=None):
@@ -190,8 +202,8 @@ def _moe_ep(xf: jax.Array, p: dict, cfg, n_model: int, rb):
     Full gating + the sort-free global dispatch build run on the (model-axis
     replicated) token slab; ``routing.slice_dispatch`` compacts the result to
     this device's expert range, and the SAME ``moe_ffn_blaze`` path runs on
-    it — the custom-VJP recompute, ``save_yswi`` policy and the resolved
-    grouped-GEMM backend all apply under EP.  ``psum`` over 'model' (outside)
+    it — the custom-VJP recompute, the plan-driven residual mode and the
+    resolved grouped-GEMM backend all apply under EP.  ``psum`` over 'model' (outside)
     combines expert contributions.
     """
     E, k = cfg.num_experts, cfg.top_k
@@ -279,7 +291,7 @@ def _moe_ep_a2a(xf: jax.Array, p: dict, cfg, n_model: int, rb):
     loc = routing.slice_dispatch(full, 0, E_loc)
     y_rows = moe_ffn_blaze(recv_x, recv_g[:, None], loc, p["w1"], p["w3"],
                            p.get("w2"), activation=cfg.ffn_act,
-                           save_yswi=cfg.save_yswi, backend=rb)
+                           residuals=moe_residual_mode(cfg), backend=rb)
     # Return outputs to their source rank (all_to_all is its own inverse
     # under this split/concat pattern), gather back into (Lc, k) slots.
     back = jax.lax.all_to_all(

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.checkpoint import POLICIES
+from repro.core import checkpoint as CK
 from repro.models import ssm
 from repro.models.attention import (attention_sublayer, init_attn_params,
                                     init_kv_cache)
@@ -136,14 +136,28 @@ def _apply_sublayer(x, p, kind: str, cfg, *, mesh, positions, cache):
     raise ValueError(kind)
 
 
-def _apply_group(x, gp, cfg, *, mesh, positions, cache_group):
+def _apply_group(x, gp, cfg, *, mesh, positions, cache_group,
+                 sub_policies=None):
+    """Apply one pattern group.  ``sub_policies`` (kind -> jax.checkpoint
+    policy) engages per-block-kind remat: the plan scopes some shared tag
+    differently across the kinds of this pattern, so each sublayer is
+    checkpointed with its own scoped policy (training path only — the
+    group-level wrap in ``forward`` handles the uniform case)."""
     auxes = []
     stats = []
     new_caches = []
     for j, kind in enumerate(cfg.block_pattern):
         c = cache_group[j] if cache_group is not None else None
-        x, aux, st, nc = _apply_sublayer(x, gp[j], kind, cfg, mesh=mesh,
-                                         positions=positions, cache=c)
+        if sub_policies is not None and c is None:
+            sub = jax.checkpoint(
+                lambda x_, p_, kind=kind: _apply_sublayer(
+                    x_, p_, kind, cfg, mesh=mesh, positions=positions,
+                    cache=None),
+                policy=sub_policies[kind], prevent_cse=False)
+            x, aux, st, nc = sub(x, gp[j])
+        else:
+            x, aux, st, nc = _apply_sublayer(x, gp[j], kind, cfg, mesh=mesh,
+                                             positions=positions, cache=c)
         auxes.append(aux)
         stats.append(st)
         new_caches.append(nc)
@@ -200,15 +214,24 @@ def forward(params, batch, cfg, *, mesh=None, last_only: bool = False,
     positions = jnp.arange(S)
     x = _act_constraint(x, mesh)
 
+    # Resolve the checkpoint plan (cfg.remat_policy: registry name or spec)
+    # and pick how to apply it: one group-level jax.checkpoint when the
+    # decisions are uniform across the pattern's kinds (bit-identical to the
+    # legacy string path for named plans), per-sublayer policies when the
+    # plan scopes a shared tag differently per block kind.
+    plan = CK.resolve_plan(config=cfg.remat_policy).plan
+    mode, payload = CK.plan_policies(plan, cfg.block_pattern)
+    sub_policies = payload if mode == "per_kind" else None
+
     def group_fn(carry, gp):
         x, aux, ov = carry
         x, a, o, _ = _apply_group(x, gp, cfg, mesh=mesh, positions=positions,
-                                  cache_group=None)
+                                  cache_group=None,
+                                  sub_policies=sub_policies)
         return (_act_constraint(x, mesh), aux + a, ov + o), None
 
-    if cfg.remat_policy != "full":
-        group_fn = jax.checkpoint(
-            group_fn, policy=POLICIES[cfg.remat_policy], prevent_cse=False)
+    if mode == "group":
+        group_fn = jax.checkpoint(group_fn, policy=payload, prevent_cse=False)
 
     zero = jnp.zeros((), jnp.float32)
     if cfg.scan_layers:

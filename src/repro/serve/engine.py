@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import checkpoint as CK
 from repro.core import gmm_backend as GB
 from repro.models import transformer as T
 
@@ -51,12 +52,25 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg, params, *, batch_slots: int = 4,
                  capacity: int = 512, greedy: bool = True, seed: int = 0,
-                 gmm_backend: str | None = None, mesh=None):
+                 gmm_backend: str | None = None, remat_policy=None,
+                 mesh=None):
         # Snapshot the backend resolution at construction: precedence is the
         # explicit engine argument > active use_backend scope >
         # cfg.gmm_backend > env > auto, frozen into a ResolvedBackend.
         self.backend = GB.resolve(gmm_backend, config=cfg.gmm_backend)
-        self.cfg = cfg.replace(gmm_backend=self.backend.name)
+        # Same discipline for the checkpoint plan: the engine argument
+        # (name/spec/plan) wins over cfg.remat_policy; an unparseable spec
+        # raises HERE, never mid-generate.  Decode never runs a backward, so
+        # the plan is provenance + config hygiene — the canonical spec is
+        # baked into the engine's cfg and surfaced as ``remat_plan``.
+        self.remat_plan = CK.resolve_plan(remat_policy,
+                                          config=cfg.remat_policy)
+        self.cfg = cfg.replace(gmm_backend=self.backend.name,
+                               remat_policy=self.remat_plan.spec)
+        if cfg.is_moe:
+            # Eagerly validate the plan's moe-scoped residual decisions
+            # (coupled-FFN_A/B or save-Y_swi-under-recompute-A/B raise).
+            CK.moe_residual_mode(self.cfg)
         # Validate the MoE distribution mode for this (cfg, mesh) pairing at
         # construction — decode steps run it via shard_map when a mesh is
         # given, and a bad pairing must not surface mid-generate.  ep_a2a is

@@ -17,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import checkpoint as CK
 from repro.core import gmm_backend as GB
 from repro.data.pipeline import make_batch_iterator
 from repro.models import transformer as T
@@ -34,7 +35,20 @@ def _config_backend(cfg, tcfg) -> str:
     return cfg.gmm_backend
 
 
-def make_train_step(cfg, tcfg, *, mesh=None, backend=None):
+def _dp_shards(mesh) -> int:
+    """Data-parallel shard count of a mesh (activations are batch-sharded
+    over these axes, so per-device residuals divide by it)."""
+    if mesh is None:
+        return 1
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def make_train_step(cfg, tcfg, *, mesh=None, backend=None,
+                    remat_policy=None, hbm_budget=None):
     """Returns ``step_fn(params, opt_state, batch) -> (params, opt, metrics)``.
 
     The grouped-GEMM backend is resolved HERE, once: ``backend`` (call-site)
@@ -43,11 +57,35 @@ def make_train_step(cfg, tcfg, *, mesh=None, backend=None):
     (a ``ResolvedBackend``) and baked into the traced config, so the step is
     immune to later environment mutation.
 
+    The activation-checkpoint plan follows the same discipline:
+    ``remat_policy`` (call-site name/spec/plan) > ``cfg.remat_policy`` >
+    default, exposed as ``step_fn.resolved_plan`` (a ``ResolvedPlan``) and
+    baked into the traced config as the canonical spec.  ``hbm_budget``
+    (bytes, *per device*) engages :meth:`CheckpointPlan.fit` instead: the
+    cheapest-recompute registry plan whose estimated residuals fit the
+    budget is selected (an explicit ``remat_policy`` becomes the preferred
+    candidate).  The estimate is taken at the residual set actually live on
+    one device: the global batch divided by the mesh's data-parallel shards
+    and by ``tcfg.num_microbatches`` (gradient accumulation bounds the live
+    set to one microbatch).
+
     With ``tcfg.num_microbatches > 1`` the global batch is split along its
     leading axis and gradients are accumulated in f32 across a ``lax.scan``
     (gradient accumulation — bounds activation memory to one microbatch)."""
     resolved = GB.resolve(backend, config=_config_backend(cfg, tcfg))
-    cfg = cfg.replace(gmm_backend=resolved.name)
+    if hbm_budget is not None:
+        prefer = CK.get_plan(remat_policy) if remat_policy is not None \
+            else None
+        b_live = max(tcfg.batch_size // max(tcfg.num_microbatches, 1)
+                     // _dp_shards(mesh), 1)
+        resolved_plan = CK.CheckpointPlan.fit(
+            cfg, b_live * tcfg.seq_len, hbm_budget, batch=b_live,
+            prefer=prefer).resolved
+    else:
+        resolved_plan = CK.resolve_plan(remat_policy,
+                                        config=cfg.remat_policy)
+    cfg = cfg.replace(gmm_backend=resolved.name,
+                      remat_policy=resolved_plan.spec)
     if cfg.is_moe:
         # Fail at construction, not at trace time inside shard_map: an
         # invalid (moe_parallel, mesh) pairing — e.g. forced 'ep' with
@@ -97,6 +135,7 @@ def make_train_step(cfg, tcfg, *, mesh=None, backend=None):
             return params, opt_state, metrics
 
     step_fn.resolved_backend = resolved
+    step_fn.resolved_plan = resolved_plan
     return step_fn
 
 
@@ -121,6 +160,7 @@ def compiled_step_memory(cfg, tcfg, *, mesh=None, backend=None) -> dict:
         "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
         "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
         "gmm_backend": step_fn.resolved_backend.name,
+        "remat_plan": step_fn.resolved_plan.spec,
         "compiled": compiled,
     }
 
@@ -130,10 +170,11 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
     """End-to-end training driver.  Returns (params, opt_state, history).
 
     ``step_hook(step, metrics)`` — if given — fires after every step with the
-    raw (device) metrics plus ``step_s`` (the step's host wall time) and
-    ``gmm_backend`` (the step's resolved grouped-GEMM backend name); the same
-    fields land in ``history`` so callers can track per-step timing and
-    backend provenance without wrapping the loop.
+    raw (device) metrics plus ``step_s`` (the step's host wall time),
+    ``gmm_backend`` (the step's resolved grouped-GEMM backend name) and
+    ``remat_plan`` (the canonical spec of the step's resolved checkpoint
+    plan); the same fields land in ``history`` so callers can track per-step
+    timing and provenance without wrapping the loop.
 
     The backend is re-resolved at the top of every step: entering a
     ``use_backend`` scope between steps (e.g. inside ``step_hook``) retargets
@@ -143,6 +184,7 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
     if params is None:
         params = T.init_params(key, cfg)
     opt_state = init_adamw(params)
+    resolved_plan = CK.resolve_plan(config=cfg.remat_policy)
     step_fns: dict[str, object] = {}
 
     def step_fn_for(name: str):
@@ -171,7 +213,8 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
         if step_hook is not None:
             jax.block_until_ready(metrics)
             metrics = dict(metrics, step_s=time.perf_counter() - ts,
-                           gmm_backend=resolved.name)
+                           gmm_backend=resolved.name,
+                           remat_plan=resolved_plan.spec)
             step_hook(step, metrics)
         if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
             m = {k: float(v) for k, v in metrics.items()
@@ -180,6 +223,7 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
             m.setdefault("step_s", time.perf_counter() - ts)
             m["wall_s"] = time.perf_counter() - t0
             m["gmm_backend"] = resolved.name
+            m["remat_plan"] = resolved_plan.spec
             history.append(m)
             log(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
                 f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "

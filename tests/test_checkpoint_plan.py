@@ -1,0 +1,392 @@
+"""CheckpointPlan API verification (the first-class redesign of the
+activation-checkpoint surface, paper §5.2 / Algorithm 1).
+
+Covers the acceptance axes:
+  * spec parser round-trips (parse -> render -> parse identity) and bad
+    specs raise;
+  * plan-driven named policies are *equivalent to the legacy string path*:
+    gradient parity on dense + MoE stacks and byte-identical saved
+    residuals between a name and its explicit spec;
+  * scoped (per-block-kind) decisions work: the MoE custom-VJP residual
+    modes preserve gradients while strictly shrinking residual bytes, and a
+    cross-kind conflict engages per-sublayer remat with unchanged gradients;
+  * ``CheckpointPlan.fit`` is budget-monotone and demonstrably changes the
+    selected plan across budget levels, and the selection reaches
+    ``make_train_step``/``step_hook``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bench.memory import (bench_config, bench_dense_config,
+                                residual_bytes)
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.core import checkpoint as CK
+from repro.core.checkpoint import (CheckpointPlan, FFN_A, MOE_GATES,
+                                   SSM_STATE, get_plan, parse_plan,
+                                   parse_size, resolve_plan)
+from repro.models import transformer as T
+from repro.train.loop import make_train_step, train
+
+DENSE = bench_dense_config()
+MOE = bench_config().replace(gmm_backend="segment")
+
+PAPER_SPEC = "save=ffn_a,ffn_b,ffn_yswi,attn_out,qkv"
+PAPER_MIN_SPEC = "save=ffn_a,ffn_b,attn_out,qkv"
+
+
+def _grads(cfg, seed=0):
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, 32), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    loss = lambda p: T.train_loss(p, batch, cfg)[0]
+    return jax.jit(jax.grad(loss))(params)
+
+
+def _assert_tree_close(a, b, atol, ctx):
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
+                                   atol=atol, err_msg=ctx)
+
+
+# ---------------------------------------------------------------------------
+# Spec parser
+# ---------------------------------------------------------------------------
+
+
+def test_spec_roundtrip_identity():
+    for spec in (
+        "save=ffn_a,ffn_b,qkv",
+        "save=ffn_a,ffn_b,qkv;moe:recompute=ffn_yswi",
+        "save=qkv,attn_out;attn_local_ffn:recompute=qkv",
+        "moe:recompute=ffn_a,ffn_b",
+        "save=",
+        "paper;moe:recompute=ffn_yswi",
+        "full;moe:recompute=ffn_a,ffn_b",
+        "save=ssm_state;ssm:recompute=ssm_state",
+    ):
+        p1 = parse_plan(spec)
+        p2 = parse_plan(p1.spec())
+        assert p1 == p2, (spec, p1.spec())
+
+
+def test_registry_names_roundtrip():
+    for name in CK.PLAN_REGISTRY:
+        p = parse_plan(name)
+        assert p.spec() == name
+        assert parse_plan(p.spec()) is p
+
+
+def test_spec_normalization():
+    # tag order is canonicalized, duplicates collapse, later unscoped
+    # recompute removes from the save set
+    a = parse_plan("save=qkv,ffn_a,ffn_a")
+    b = parse_plan("save=ffn_a;save=qkv")
+    assert a == b
+    assert parse_plan("save=ffn_a,qkv;recompute=qkv") == \
+        parse_plan("save=ffn_a")
+
+
+def test_repeated_override_keeps_last_wins_semantics():
+    """Dedupe of identical override triples must keep the LAST occurrence —
+    dropping a repeated final directive would resurrect an intervening
+    opposite decision."""
+    p = parse_plan("moe:save=ffn_yswi;moe:recompute=ffn_yswi;"
+                   "moe:save=ffn_yswi")
+    assert p.override_for("ffn_yswi", CK.MOE_SCOPE_KINDS) == CK.SAVE
+    assert CK.moe_residual_mode(MOE.replace(
+        save_yswi=False, remat_policy=p.spec())) == "ab_yswi"
+    assert parse_plan(p.spec()) == p
+
+
+def test_bad_specs_raise():
+    for bad in (
+        "bogus",                            # not a name, not a spec
+        "save=bogus_tag",                   # unknown tag
+        "bogus_scope:save=qkv",             # unknown scope
+        "zzz*:save=qkv",                    # glob matching no kind
+        "moe:keep=qkv",                     # unknown directive
+        "paper;save=qkv;full",              # special + default save set
+        123,                                # not a string
+    ):
+        with pytest.raises((ValueError, TypeError)):
+            get_plan(bad)
+
+
+def test_scope_matching():
+    assert CK.scope_matches("moe", "attn_moe")
+    assert CK.scope_matches("moe", "attn_local_moe")
+    assert not CK.scope_matches("moe", "attn_ffn")
+    assert CK.scope_matches("*moe", "attn_moe")
+    assert CK.scope_matches("ssm", "hymba")
+    assert CK.scope_matches("attn_ffn", "attn_ffn")
+
+
+def test_parse_size():
+    assert parse_size("2GiB") == 2 * 2**30
+    assert parse_size("1.5MiB") == int(1.5 * 2**20)
+    assert parse_size("1000") == 1000
+    assert parse_size(4096) == 4096
+    with pytest.raises(ValueError):
+        parse_size("2 buckets")
+
+
+# ---------------------------------------------------------------------------
+# Plan-vs-legacy equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_plan_spec_equals_named_policy_dense():
+    """The explicit spec of 'paper'/'paper_min' and the registry name
+    produce identical gradients AND byte-identical saved residuals."""
+    base = _grads(DENSE.replace(remat_policy="full"))
+    for name, spec in (("paper", PAPER_SPEC), ("paper_min", PAPER_MIN_SPEC)):
+        _assert_tree_close(base, _grads(DENSE.replace(remat_policy=name)),
+                           1e-5, name)
+        _assert_tree_close(base, _grads(DENSE.replace(remat_policy=spec)),
+                           1e-5, spec)
+        assert residual_bytes(DENSE, name) == residual_bytes(DENSE, spec), \
+            (name, spec)
+
+
+def test_plan_spec_equals_named_policy_moe():
+    base = _grads(MOE.replace(remat_policy="full"))
+    for name, spec in (("paper", PAPER_SPEC), ("paper_min", PAPER_MIN_SPEC)):
+        _assert_tree_close(base, _grads(MOE.replace(remat_policy=spec)),
+                           1e-5, spec)
+        assert residual_bytes(MOE, name) == residual_bytes(MOE, spec), \
+            (name, spec)
+
+
+def test_policy_tags_derive_from_registry():
+    """The deprecated dict views can never drift from the registry."""
+    assert CK.POLICY_TAGS["paper"] == CK.PLAN_REGISTRY["paper"].saved
+    assert set(CK.POLICY_TAGS) == {
+        n for n, p in CK.PLAN_REGISTRY.items() if not p.special}
+    assert set(CK.POLICIES) == set(CK.PLAN_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Scoped decisions: the MoE custom-VJP residual modes
+# ---------------------------------------------------------------------------
+
+
+def test_moe_residual_mode_resolution():
+    assert CK.moe_residual_mode(MOE) == "ab_yswi"
+    # deprecated alias still honoured when the plan leaves it open
+    assert CK.moe_residual_mode(MOE.replace(save_yswi=False)) == "ab"
+    # explicit moe-scoped decisions override the alias in both directions
+    assert CK.moe_residual_mode(
+        MOE.replace(remat_policy="moe:recompute=ffn_yswi")) == "ab"
+    assert CK.moe_residual_mode(MOE.replace(
+        save_yswi=False, remat_policy="moe:save=ffn_yswi")) == "ab_yswi"
+    assert CK.moe_residual_mode(
+        MOE.replace(remat_policy="moe:recompute=ffn_a,ffn_b")) == "x"
+    assert MOE.resolved_save_yswi is True
+    assert MOE.replace(
+        remat_policy="moe:recompute=ffn_yswi").resolved_save_yswi is False
+
+
+def test_moe_residual_mode_invalid_combinations_raise():
+    with pytest.raises(ValueError, match="coupled"):
+        CK.moe_residual_mode(MOE.replace(remat_policy="moe:recompute=ffn_a"))
+    with pytest.raises(ValueError, match="Y_swi"):
+        CK.moe_residual_mode(MOE.replace(
+            remat_policy="moe:recompute=ffn_a,ffn_b;moe:save=ffn_yswi"))
+
+
+def test_blaze_pallas_rejects_plan_residual_overrides():
+    """The fused-Pallas composition has a fixed residual set — a plan that
+    scopes a different MoE residual mode must fail loudly, not be silently
+    ignored."""
+    cfg = MOE.replace(moe_impl="blaze_pallas",
+                      remat_policy="moe:recompute=ffn_a,ffn_b")
+    with pytest.raises(ValueError, match="blaze_pallas"):
+        _grads(cfg)
+
+
+def test_moe_scoped_plans_gradient_parity_and_residual_ordering():
+    """Scoped moe decisions never change the math, and under the
+    save-everything stack policy ('full;...' seeds) each deeper recompute
+    mode strictly shrinks what autodiff holds for backward."""
+    base = _grads(MOE.replace(remat_policy="full"))
+    specs = ("full", "full;moe:recompute=ffn_yswi",
+             "full;moe:recompute=ffn_a,ffn_b")
+    rb = {}
+    for spec in specs:
+        _assert_tree_close(base, _grads(MOE.replace(remat_policy=spec)),
+                           1e-5, spec)
+        rb[spec] = residual_bytes(MOE, spec)
+    assert rb[specs[2]] < rb[specs[1]] < rb[specs[0]], rb
+
+
+# ---------------------------------------------------------------------------
+# Per-block-kind application
+# ---------------------------------------------------------------------------
+
+
+def test_plan_policies_group_vs_per_kind():
+    pat2 = ("attn_local_ffn", "attn_ffn")
+    # uniform decisions -> one group-level policy (legacy-identical)
+    mode, _ = CK.plan_policies(get_plan("paper"), pat2)
+    assert mode == "group"
+    mode, _ = CK.plan_policies(get_plan("full"), pat2)
+    assert mode == "full"
+    # a tag decided differently in two kinds that both materialize it ->
+    # per-sublayer policies
+    mode, pols = CK.plan_policies(
+        get_plan("save=qkv,attn_out;attn_local_ffn:recompute=qkv"), pat2)
+    assert mode == "per_kind" and set(pols) == set(pat2)
+    # scoping a tag a kind doesn't materialize is NOT a conflict
+    mode, _ = CK.plan_policies(
+        get_plan("save=qkv;moe:recompute=ffn_yswi"),
+        ("attn_ffn", "attn_moe"))
+    assert mode == "group"
+
+
+def test_per_kind_remat_gradient_parity():
+    cfg2 = DENSE.replace(block_pattern=("attn_local_ffn", "attn_ffn"),
+                         local_global_period=2, num_layers=2,
+                         sliding_window=16)
+    base = _grads(cfg2.replace(remat_policy="full"))
+    spec = "save=qkv,attn_out;attn_local_ffn:recompute=qkv"
+    _assert_tree_close(base, _grads(cfg2.replace(remat_policy=spec)),
+                       1e-5, spec)
+
+
+# ---------------------------------------------------------------------------
+# Estimator (incl. the SSM_STATE accounting fix)
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_scoped_specs():
+    n = 64
+    est_paper = CK.estimate_saved_bytes(DENSE, "paper", n)
+    # scoping FFN tags out of the (only) kind drops their bytes
+    est_noffn = CK.estimate_saved_bytes(
+        DENSE, "paper;attn_ffn:recompute=ffn_a,ffn_b,ffn_yswi", n)
+    assert 0 < est_noffn < est_paper
+    assert est_noffn == CK.estimate_saved_bytes(DENSE, "save=attn_out,qkv", n)
+    # specials stay non-estimable, even seeded with overrides
+    assert CK.estimate_saved_bytes(DENSE, "full;moe:recompute=ffn_yswi", n) \
+        is None
+
+
+def test_ssm_state_bytes_accounted():
+    """`ssm`/`hymba` kinds now contribute SSM_STATE bytes (previously the
+    estimator silently reported 0 for SSM/hybrid configs)."""
+    hy = get_config("hymba_1_5b").reduced()
+    xl = get_config("xlstm_1_3b").reduced()
+    for cfg in (hy, xl):
+        by_kind = dict(CK.tag_bytes_by_kind(cfg, 2048))
+        ssm_kinds = [k for k in cfg.block_pattern
+                     if k in ("mlstm", "slstm", "hymba")]
+        assert ssm_kinds, cfg.block_pattern
+        for k in ssm_kinds:
+            assert by_kind[k][SSM_STATE] > 0, (cfg.name, k)
+        est = CK.estimate_saved_bytes(cfg, "save=ssm_state", 2048)
+        assert est and est > 0
+        # and the back-compat summed view agrees
+        assert CK.tag_bytes_per_group(cfg, 2048)[SSM_STATE] > 0
+    # pure-attention configs still account zero SSM bytes
+    assert CK.tag_bytes_per_group(DENSE, 2048)[SSM_STATE] == 0
+    # sub-chunk sequences: the scans clamp chunk=min(chunk, S), so every
+    # batch row still holds one carry — `batch` floors the snapshot count
+    # (B=4 x S=64 tokens is 4 carries, not 1)
+    one = CK.tag_bytes_per_group(xl, 256, batch=1)[SSM_STATE]
+    four = CK.tag_bytes_per_group(xl, 256, batch=4)[SSM_STATE]
+    assert four == 4 * one, (one, four)
+
+
+def test_kind_tags_cover_canon():
+    seen = set()
+    for k in CK.BLOCK_KINDS:
+        seen |= set(CK.kind_tags(k))
+    assert seen == set(CK.CANON_TAGS)
+    assert MOE_GATES in CK.kind_tags("attn_moe")
+    assert FFN_A not in CK.kind_tags("attn_moe")    # expert FFN is VJP-managed
+
+
+# ---------------------------------------------------------------------------
+# Budget fit
+# ---------------------------------------------------------------------------
+
+
+def test_fit_changes_plan_across_budget_levels():
+    """Acceptance: fit demonstrably selects different plans at >= 3 budget
+    levels, and the selection is the cheapest-recompute fitting plan."""
+    n = 64
+    e_min = CK.estimate_saved_bytes(DENSE, "paper_min", n)
+    e_pap = CK.estimate_saved_bytes(DENSE, "paper", n)
+    assert 0 < e_min < e_pap
+    picks = [CheckpointPlan.fit(DENSE, n, b).plan.spec()
+             for b in (0, e_min, e_pap)]
+    assert picks == ["none", "paper_min", "paper"], picks
+
+
+def test_fit_monotonicity():
+    """A larger budget never picks a more-recompute (smaller-save) plan."""
+    n = 64
+    budgets = [0, 10_000, 100_000, 200_000, 250_000, 300_000, 10**9]
+    ests = [CheckpointPlan.fit(DENSE, n, b).plan
+            .estimate_saved_bytes(DENSE, n) for b in budgets]
+    assert ests == sorted(ests), list(zip(budgets, ests))
+
+
+def test_fit_prefer_and_table():
+    n = 64
+    prefer = get_plan("save=qkv")
+    e_pref = prefer.estimate_saved_bytes(DENSE, n)
+    fit = CheckpointPlan.fit(DENSE, n, e_pref, prefer=prefer)
+    assert fit.plan == prefer                   # fits -> preferred wins
+    assert fit.table[0].chosen and fit.table[0].fits
+    fit2 = CheckpointPlan.fit(DENSE, n, e_pref - 1, prefer=prefer)
+    assert fit2.plan.spec() == "none"           # doesn't fit -> fall through
+    assert not fit2.table[0].fits
+    assert sum(r.chosen for r in fit2.table) == 1
+
+
+def test_fit_reaches_train_step_and_step_hook():
+    """Acceptance: the fit-selected plan is baked into the step and surfaces
+    through step_hook (and history)."""
+    tcfg = TrainConfig(total_steps=1, batch_size=2, seq_len=32, log_every=1)
+    e_min = CK.estimate_saved_bytes(DENSE, "paper_min", 2 * 32)
+    step = make_train_step(DENSE, tcfg, hbm_budget=e_min)
+    assert step.resolved_plan.source == "fit"
+    assert step.resolved_plan.spec == "paper_min"
+    hooked = []
+    _, _, hist = train(DENSE.replace(remat_policy=PAPER_SPEC), tcfg,
+                       log=lambda *a: None,
+                       step_hook=lambda s, m: hooked.append(m["remat_plan"]))
+    assert hooked == [PAPER_SPEC]
+    assert hist[0]["remat_plan"] == PAPER_SPEC
+
+
+# ---------------------------------------------------------------------------
+# Resolution provenance
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_plan_precedence():
+    r = resolve_plan("paper", config="none")
+    assert (r.spec, r.source) == ("paper", "arg")
+    r = resolve_plan(None, config="paper_min")
+    assert (r.spec, r.source) == ("paper_min", "config")
+    r = resolve_plan(None, config=None)
+    assert (r.spec, r.source) == ("none", "default")
+    assert resolve_plan(r) is r                 # already-resolved passthrough
+    p = get_plan(PAPER_SPEC)
+    assert resolve_plan(p).plan is p
+
+
+def test_serve_engine_validates_plan_at_construction():
+    from repro.serve.engine import ServeEngine
+    params = jax.eval_shape(
+        lambda k: T.init_params(k, MOE), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ServeEngine(MOE, params, remat_policy="save=bogus")
+    with pytest.raises(ValueError, match="coupled"):
+        ServeEngine(MOE.replace(remat_policy="moe:recompute=ffn_a"), params)
