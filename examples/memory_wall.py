@@ -14,6 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.bench.paper_tables import IMPLS, residual_bytes
 from repro.configs.paper_tables import PAPER_CONFS, PAPER_TABLE1
+from repro.core import memsim
 from repro.core.checkpoint import (CheckpointPlan, estimate_saved_bytes,
                                    get_plan, parse_size)
 
@@ -25,7 +26,10 @@ from repro.core.checkpoint import (CheckpointPlan, estimate_saved_bytes,
 PLAN_SWEEP = ("none", "paper_min", "paper", "save=qkv",
               "save=qkv,attn_out,moe_gates")
 
-FIT_BUDGETS = ("128MiB", "300MiB", "1GiB")
+#: activation-peak budgets for the fit table below (``base="acts"``: the
+#: activation timeline alone, params/optimizer excluded — the axis the
+#: paper's memory-wall study varies).
+FIT_BUDGETS = ("16GiB", "32GiB", "48GiB")
 
 
 def plan_tables():
@@ -42,29 +46,40 @@ def plan_tables():
             for p in PLAN_SWEEP)
         print(f"{name:12s}" + row)
 
-    print("\n== budget-fit decision table (CheckpointPlan.fit over the "
-          "registry candidates) ==")
-    print(f"{'conf':12s}" + "".join(f"{b:>14s}" for b in FIT_BUDGETS))
+    print("\n== budget-fit decision table (CheckpointPlan.fit ranks by "
+          "SIMULATED PEAK — core.memsim phase timeline, activation base) ==")
+    print(f"{'conf':12s}" + "".join(f"{b:>34s}" for b in FIT_BUDGETS))
     for name, conf in PAPER_TABLE1.items():
         cfg = PAPER_CONFS[name]
         _, _, _, b, s = conf
         row = "".join(
-            f"{CheckpointPlan.fit(cfg, b * s, parse_size(bud)).plan.spec():>14s}"
+            f"{CheckpointPlan.fit(cfg, b * s, parse_size(bud), batch=b, base='acts').plan.spec():>34s}"
             for bud in FIT_BUDGETS)
         print(f"{name:12s}" + row)
 
     # Full table for one cell, with a custom spec as the preferred candidate
     # (what `dryrun --remat-policy <spec> --hbm-budget <b>` runs per arch).
+    # Each row carries the simulated peak and the phase responsible — the
+    # transient-aware verdict residual accounting cannot give.
     prefer = get_plan(PLAN_SWEEP[-2])
     name, conf = next(iter(PAPER_TABLE1.items()))
     fit = CheckpointPlan.fit(PAPER_CONFS[name], conf[3] * conf[4],
-                             parse_size(FIT_BUDGETS[1]), prefer=prefer)
+                             parse_size(FIT_BUDGETS[1]), batch=conf[3],
+                             prefer=prefer, base="acts")
     print(f"\nfull decision table for {name} @ {FIT_BUDGETS[1]} "
           f"(prefer={PLAN_SWEEP[-2]!r}):")
     for r in fit.table:
         mark = "*" if r.chosen else (" " if r.fits else "x")
-        print(f"  [{mark}] est={r.est_saved_bytes / 1e6:9.1f}MB "
-              f"fits={str(r.fits):5s} {r.spec}")
+        print(f"  [{mark}] sim_peak={r.sim_peak_bytes / 2**30:6.1f}GiB "
+              f"@{r.peak_phase:18s} fits={str(r.fits):5s} {r.spec}")
+
+    # The phase timeline behind the chosen cell: where the peak actually
+    # sits (bwd recompute spike vs loss logits vs a2a buffers).
+    tl = memsim.simulate(PAPER_CONFS[name], conf[3] * conf[4], batch=conf[3],
+                         plan=fit.plan, base="acts")
+    print(f"\nsimulated phase timeline for {name} under "
+          f"{fit.plan.spec()!r} (highest-live phases):")
+    print(tl.table(limit=6))
 
 
 def main():

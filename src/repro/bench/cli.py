@@ -98,4 +98,22 @@ def main(argv: list[str] | None = None) -> int:
         for line in lines:
             print(line)
         ok = ok and rec_ok
+
+    # Simulated-vs-measured peak parity: gate the memsim model against the
+    # XLA memory_analysis() peaks of THIS run (baseline-independent — the
+    # simulator must track what the current jax pin actually allocates).
+    from repro.bench.memory import sim_parity_failures
+    for rec in records:
+        if rec["suite"] != "memory":
+            continue
+        fails = sim_parity_failures(rec["entries"])
+        n_sim = sum(e["name"].startswith("peak_sim/")
+                    for e in rec["entries"])
+        print(f"== memory sim-vs-measured parity ({n_sim} entries) ==")
+        for line in fails:
+            print(line)
+        if not fails:
+            print("OK: every peak_sim/* entry within tolerance of its "
+                  "measured peak")
+        ok = ok and not fails
     return 0 if ok else 1

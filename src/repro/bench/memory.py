@@ -36,7 +36,13 @@ from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.core import checkpoint as CK
 from repro.core import gmm_backend as GB
+from repro.core import memsim
 from repro.models import transformer as T
+
+#: relative tolerance of the simulated-vs-measured peak parity gate (and of
+#: the ``peak_sim/*`` entries' own baseline drift) — the deterministic-entry
+#: tolerance the acceptance bar names.
+SIM_PARITY_TOLERANCE_PCT = 20.0
 
 #: policy order used by suites and by the ordering assertions in tests —
 #: derived from the CheckpointPlan registry (tag plans by ascending save
@@ -276,6 +282,13 @@ def memory_suite(*, small: bool = False) -> list:
                                  kind="peak_bytes", unit="bytes",
                                  tolerance_pct=100.0, **meta))
                 if i == 0:  # backend-independent accountants: record once
+                    sim = memsim.simulate_peak(cfg, batch * seq, batch=batch,
+                                               plan=policy, mode="single",
+                                               base="grad")
+                    out.append(entry(
+                        f"peak_sim/{cfg.name}/{policy}/single", sim,
+                        kind="peak_sim_bytes", unit="bytes",
+                        tolerance_pct=SIM_PARITY_TOLERANCE_PCT, **meta))
                     out.append(entry(
                         f"memory/{cfg.name}/{policy}/residual_bytes",
                         r["residual_bytes"], kind="residual_bytes",
@@ -291,4 +304,87 @@ def memory_suite(*, small: bool = False) -> list:
                                          f"memory/{cfg.name}/roofline")
     out += train_step_memory_entries(bench_config(), batch=batch, seq=seq)
     out += ep_saved_residual_entries(small=small)
+    out += ep_peak_entries(small=small)
     return out
+
+
+def ep_peak_entries(*, small: bool = False) -> list:
+    """Measured XLA peaks AND simulated peaks of fwd+bwd under the
+    expert-sharded modes (``ep`` and ``ep_a2a`` on a 1x2 debug mesh), one
+    pair per registry plan — the distributed half of the simulator-parity
+    matrix (the single-device half lives in :func:`memory_suite`'s
+    ``peak_sim/*/single`` entries).  Pairs are emitted atomically so
+    :func:`sim_parity_failures` never sees an unmatched sim entry."""
+    from repro.launch.mesh import make_debug_mesh
+    if len(jax.devices()) < 2:
+        import sys
+        print("# skipping EP peak entries: need >= 2 host devices "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "before jax initializes; `python -m repro.bench` does this "
+              "automatically)", file=sys.stderr)
+        return []
+    mesh = make_debug_mesh(1, 2)
+    n_model = mesh.shape["model"]
+    batch, seq = (2, 32) if small else (4, 64)
+    out = []
+    for mode in ("ep", "ep_a2a"):
+        cfg = bench_config().replace(moe_parallel=mode,
+                                     gmm_backend="segment")
+        for policy in POLICY_ORDER:
+            c = cfg.replace(remat_policy=CK.resolve_plan(policy).spec)
+
+            def loss(params, tokens):
+                b = {"tokens": tokens, "labels": tokens}
+                return T.train_loss(params, b, c, mesh=mesh)[0]
+
+            args = _abstract_args(c, batch, seq)
+            with mesh:
+                compiled = jax.jit(jax.grad(loss)).lower(*args).compile()
+            mem = compiled.memory_analysis()
+            peak = (getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "output_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)
+                    - getattr(mem, "alias_size_in_bytes", 0))
+            sim = memsim.simulate_peak(c, batch * seq, batch=batch,
+                                       plan=policy, mode=mode,
+                                       n_model=n_model, base="grad")
+            meta = {"batch": batch, "seq": seq, "mesh": "1x2",
+                    "remat_plan": CK.resolve_plan(policy).spec}
+            out.append(entry(f"memory/{cfg.name}/{policy}/{mode}/peak_bytes",
+                             peak, kind="peak_bytes", unit="bytes",
+                             tolerance_pct=100.0, **meta))
+            out.append(entry(f"peak_sim/{cfg.name}/{policy}/{mode}", sim,
+                             kind="peak_sim_bytes", unit="bytes",
+                             tolerance_pct=SIM_PARITY_TOLERANCE_PCT, **meta))
+    return out
+
+
+def sim_parity_failures(entries: list) -> list:
+    """The simulated-vs-measured peak gate: every ``peak_sim/<cfg>/<plan>/
+    <mode>`` entry must agree with its measured counterpart — the
+    ``memory/<cfg>/<plan>/segment/peak_bytes`` entry for ``single`` (the
+    simulator models the portable segment backend's buffers; other backends'
+    peaks are tracked but not parity-gated) or ``memory/<cfg>/<plan>/<mode>/
+    peak_bytes`` for the sharded modes — within the sim entry's tolerance.
+    Returns human-readable failure lines (empty == parity holds)."""
+    by_name = {e["name"]: e for e in entries}
+    fails = []
+    for e in entries:
+        if not e["name"].startswith("peak_sim/"):
+            continue
+        _, cfg_name, plan, sim_mode = e["name"].split("/")
+        backend = "segment" if sim_mode == "single" else sim_mode
+        want = f"memory/{cfg_name}/{plan}/{backend}/peak_bytes"
+        measured = by_name.get(want)
+        if measured is None:
+            fails.append(f"PARITY {e['name']}: measured counterpart "
+                         f"{want} missing from this run")
+            continue
+        tol = e["tolerance_pct"] or SIM_PARITY_TOLERANCE_PCT
+        err = (e["value"] - measured["value"]) / max(measured["value"], 1.0)
+        if abs(err) * 100.0 > tol:
+            fails.append(
+                f"PARITY {e['name']}: sim {int(e['value']):,} vs measured "
+                f"{int(measured['value']):,} ({err * 100.0:+.1f}% "
+                f"> +/-{tol:.0f}%)")
+    return fails

@@ -239,17 +239,72 @@ class CheckpointPlan:
     @classmethod
     def fit(cls, cfg, n_tokens: int, hbm_budget: int, *, batch: int = 1,
             candidates: list["CheckpointPlan"] | None = None,
-            prefer: "CheckpointPlan | None" = None) -> "FitResult":
-        """Budget-driven auto-selection: walk candidate plans through
-        :meth:`estimate_saved_bytes` and pick the cheapest-recompute plan
-        (the one saving the *most* residual bytes) whose residuals fit under
-        ``hbm_budget`` bytes.
+            prefer: "CheckpointPlan | None" = None, rank: str = "peak",
+            mode: str | None = None, n_model: int = 1,
+            base: str = "train") -> "FitResult":
+        """Budget-driven auto-selection.
 
-        ``candidates`` defaults to the estimable registry plans; ``prefer``
-        (e.g. an explicit ``--remat-policy`` spec next to ``--hbm-budget``)
-        is tried first and wins whenever it fits.  When nothing fits, the
-        least-saving candidate is chosen — the budget is a target, not a
-        hard guarantee, and the caller can read ``fits`` off the table."""
+        ``rank="peak"`` (default) walks every candidate through the
+        per-phase liveness simulator (:mod:`repro.core.memsim`) and picks
+        the cheapest-*recompute* plan whose simulated per-device **peak**
+        (transient spikes, a2a capacity buffers and optimizer state
+        included — what actually OOMs) fits under ``hbm_budget`` bytes.
+        ``mode``/``n_model`` select the MoE distribution being simulated
+        and ``base`` what sits under the activation timeline (see
+        :func:`memsim.simulate`; the default ``"train"`` budgets the full
+        train step: params + grads + AdamW m/v + activations).
+
+        ``rank="residual"`` is the PR-5 accountant: rank by
+        :meth:`estimate_saved_bytes` and compare *resident residuals* to
+        the budget.  It is blind to transient peaks — kept for comparison
+        (and regression-pinned by the test suite).
+
+        ``candidates`` defaults to :func:`fit_candidates` — the registry
+        plans plus, on MoE configs, ``full``-seeded scoped specs like
+        ``full;moe:recompute=ffn_yswi`` that trade the custom-VJP residuals
+        for replay GEMMs.  ``prefer`` (e.g. an explicit ``--remat-policy``
+        next to ``--hbm-budget``) is tried first and wins whenever it fits.
+        When nothing fits, the lowest-peak (or least-saving) candidate is
+        chosen — the budget is a target, not a hard guarantee, and the
+        caller can read ``fits`` off the table."""
+        if rank not in ("peak", "residual"):
+            raise ValueError(f"unknown fit rank {rank!r}; peak|residual")
+        if rank == "residual":
+            return cls._fit_residual(cfg, n_tokens, hbm_budget, batch=batch,
+                                     candidates=candidates, prefer=prefer)
+        from repro.core import memsim
+        if candidates is None:
+            candidates = fit_candidates(cfg)
+
+        def sim(p):
+            return memsim.simulate(cfg, n_tokens, batch=batch, plan=p,
+                                   mode=mode, n_model=n_model, base=base)
+
+        rows = [(p, sim(p)) for p in candidates]
+        rows.sort(key=lambda pt: (pt[1].recompute_bytes, pt[1].peak_bytes))
+        if prefer is not None:
+            rows = [(prefer, sim(prefer))] + \
+                [r for r in rows if r[0] != prefer]
+        chosen = next((p for p, t in rows if t.peak_bytes <= hbm_budget),
+                      None)
+        if chosen is None:
+            chosen = min(rows, key=lambda pt: pt[1].peak_bytes)[0]
+        table = tuple(
+            FitRow(spec=p.spec(),
+                   est_saved_bytes=p.estimate_saved_bytes(
+                       cfg, n_tokens, batch=batch),
+                   fits=t.peak_bytes <= hbm_budget, chosen=p == chosen,
+                   sim_peak_bytes=t.peak_bytes, peak_phase=t.peak_phase)
+            for p, t in rows)
+        timeline = next(t for p, t in rows if p == chosen)
+        return FitResult(plan=chosen, budget_bytes=int(hbm_budget),
+                         table=table, rank="peak", base=base,
+                         timeline=timeline)
+
+    @classmethod
+    def _fit_residual(cls, cfg, n_tokens: int, hbm_budget: int, *,
+                      batch: int = 1, candidates=None,
+                      prefer=None) -> "FitResult":
         if candidates is None:
             candidates = [p for p in PLAN_REGISTRY.values() if not p.special]
         rows = [(p, p.estimate_saved_bytes(cfg, n_tokens, batch=batch))
@@ -263,7 +318,7 @@ class CheckpointPlan:
             if e is None:
                 raise ValueError(
                     f"preferred plan {prefer.spec()!r} is not statically "
-                    "estimable and cannot enter a budget fit")
+                    "estimable and cannot enter a residual-rank budget fit")
             rows = [(prefer, e)] + [r for r in rows if r[0] != prefer]
         chosen = next((p for p, e in rows if e <= hbm_budget), None)
         if chosen is None:
@@ -273,25 +328,50 @@ class CheckpointPlan:
                    fits=e <= hbm_budget, chosen=p == chosen)
             for p, e in rows)
         return FitResult(plan=chosen, budget_bytes=int(hbm_budget),
-                         table=table)
+                         table=table, rank="residual")
+
+
+def fit_candidates(cfg) -> list[CheckpointPlan]:
+    """The default candidate set of a peak-ranked fit: every registry plan
+    (the simulator makes ``full``/``dots`` rankable), plus — when the block
+    pattern has an MoE kind — ``full``-seeded scoped specs that peel the MoE
+    custom-VJP residuals off one step at a time (``ffn_yswi`` recomputed,
+    then A/B too, replaying two grouped GEMMs in backward).  Scoped variants
+    of the *wrapped* plans are not enumerated: under ``jax.checkpoint`` the
+    VJP residuals are transient, so those specs simulate identically to
+    their seeds.  Per-layer-depth scoping is likewise out: layers execute
+    under one ``lax.scan``, which cannot apply a different policy per
+    depth."""
+    plans = [PLAN_REGISTRY[n] for n in plan_order()]
+    if any(k.endswith("moe") for k in cfg.block_pattern):
+        plans += [parse_plan("full;moe:recompute=ffn_yswi"),
+                  parse_plan("full;moe:recompute=ffn_a,ffn_b,ffn_yswi")]
+    return plans
 
 
 @dataclass(frozen=True)
 class FitRow:
     spec: str
-    est_saved_bytes: int
+    est_saved_bytes: int | None
     fits: bool
     chosen: bool
+    sim_peak_bytes: int | None = None
+    peak_phase: str = ""
 
 
 @dataclass(frozen=True)
 class FitResult:
     """Outcome of :meth:`CheckpointPlan.fit` — the chosen plan plus the full
-    decision table (every candidate's estimate and fit verdict)."""
+    decision table (every candidate's estimate, simulated peak and fit
+    verdict).  ``timeline`` is the chosen plan's simulated phase timeline
+    (None under ``rank="residual"``)."""
 
     plan: CheckpointPlan
     budget_bytes: int
     table: tuple[FitRow, ...]
+    rank: str = "peak"
+    base: str = "train"
+    timeline: "object | None" = None
 
     @property
     def resolved(self) -> "ResolvedPlan":

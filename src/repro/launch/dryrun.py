@@ -19,11 +19,15 @@ both the weight PartitionSpecs and the shard_map execution path follow it.
 ``repro.core.checkpoint`` spec like ``"save=ffn_a,ffn_b,qkv"``);
 ``--hbm-budget BYTES`` (suffixes ``KiB/MiB/GiB`` accepted; *per device*)
 engages ``CheckpointPlan.fit`` instead — the cheapest-recompute plan whose
-estimated per-device live residuals fit the budget is selected per
+*simulated per-device train-step peak* (params + grads + optimizer state +
+the ``repro.core.memsim`` phase timeline: transient recompute spikes, a2a
+capacity buffers, optimizer update) fits the budget is selected per
 (arch x shape), with an explicit ``--remat-policy`` as the preferred
-candidate.  Every record stamps the
-resolved plan (``remat_plan``/``remat_plan_source``, plus the ``remat_fit``
-decision table under a budget).
+candidate.  Every record stamps the resolved plan
+(``remat_plan``/``remat_plan_source``), the ``remat_fit`` decision table
+(one ``source=explicit|config|default`` row when no budget engages the
+fit), and the simulated phase timeline
+(``peak_sim_bytes``/``peak_sim_phase``/``sim_phases``).
 """
 
 import os
@@ -219,28 +223,57 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     cfg_overrides = dict(cfg_overrides or {})
     cfg0 = get_config(arch).replace(**cfg_overrides)
     prefer = CK.get_plan(remat_policy) if remat_policy else None
+    ishape = INPUT_SHAPES[shape_name]
+    n_dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_dp *= mesh.shape[a]
+    b_dev = max(ishape.global_batch // max(n_dp, 1), 1)
+    if ishape.kind == "train":
+        M = microbatches if microbatches is not None \
+            else _num_microbatches(ishape, mesh, cfg0)
+        b_dev = max(b_dev // M, 1)
+    n_model = max(mesh.shape.get("model", 1), 1)
+    moe_mode = None
+    if cfg0.is_moe:
+        from repro.models.moe_block import resolve_moe_parallel
+        moe_mode = resolve_moe_parallel(cfg0, mesh)
     if hbm_budget is not None:
-        ishape = INPUT_SHAPES[shape_name]
-        n_dp = 1
-        for a in ("pod", "data"):
-            if a in mesh.axis_names:
-                n_dp *= mesh.shape[a]
-        b_dev = max(ishape.global_batch // max(n_dp, 1), 1)
-        if ishape.kind == "train":
-            M = microbatches if microbatches is not None \
-                else _num_microbatches(ishape, mesh, cfg0)
-            b_dev = max(b_dev // M, 1)
         fit = CK.CheckpointPlan.fit(
             cfg0, b_dev * ishape.seq_len, hbm_budget, batch=b_dev,
-            prefer=prefer)
+            prefer=prefer, mode=moe_mode, n_model=n_model)
         plan_r = fit.resolved
-        rec["remat_fit"] = [dataclasses.asdict(r) for r in fit.table]
+        rec["remat_fit"] = [dict(dataclasses.asdict(r), source="fit")
+                            for r in fit.table]
         rec["hbm_budget"] = fit.budget_bytes
+        timeline = fit.timeline
     else:
+        from repro.core import memsim
         plan_r = CK.resolve_plan(remat_policy, config=cfg0.remat_policy)
+        timeline = memsim.simulate(
+            cfg0, b_dev * ishape.seq_len, batch=b_dev, plan=plan_r.plan,
+            mode=moe_mode, n_model=n_model, base="train")
+        # No budget: stamp the decision table anyway (one source=explicit /
+        # source=config / source=default row for the resolved plan) so CI
+        # assertions over remat_fit never vacuously pass on a missing key.
+        src = "explicit" if plan_r.source == "arg" else plan_r.source
+        rec["remat_fit"] = [dict(
+            spec=plan_r.spec, est_saved_bytes=plan_r.plan.estimate_saved_bytes(
+                cfg0, b_dev * ishape.seq_len, batch=b_dev),
+            fits=None, chosen=True, sim_peak_bytes=timeline.peak_bytes,
+            peak_phase=timeline.peak_phase, source=src)]
     cfg_overrides["remat_policy"] = plan_r.spec
     rec["remat_plan"] = plan_r.spec
     rec["remat_plan_source"] = plan_r.source
+    # The simulated per-device phase timeline of the chosen plan: the peak,
+    # the phase responsible, and the highest-live phases (memsim table).
+    rec["peak_sim_bytes"] = timeline.peak_bytes
+    rec["peak_sim_phase"] = timeline.peak_phase
+    rec["sim_phases"] = [
+        {"phase": p.name, "held_bytes": p.held_bytes,
+         "transient_bytes": p.transient_bytes,
+         "collective_bytes": p.collective_bytes, "live_bytes": p.live_bytes}
+        for p in sorted(timeline.phases, key=lambda p: -p.live_bytes)[:4]]
     out, skip, cfg = _compile_once(arch, shape_name, mesh, cfg_overrides,
                                    microbatches=microbatches)
     # Stamp the backend the lowering actually resolved (cfg at the config
@@ -352,12 +385,12 @@ def main(argv=None):
                          "('save=ffn_a,ffn_b,qkv;moe:recompute=ffn_yswi'); "
                          "see README 'Activation checkpoint plans'")
     ap.add_argument("--hbm-budget", default=None,
-                    help="per-device activation-residual budget (bytes; "
+                    help="per-device train-step peak budget (bytes; "
                          "KiB/MiB/GiB suffixes ok) — budget-fit the "
                          "checkpoint plan per (arch x shape) via "
-                         "CheckpointPlan.fit over the per-device live "
-                         "residual set; an explicit --remat-policy becomes "
-                         "the preferred candidate")
+                         "CheckpointPlan.fit over the simulated per-device "
+                         "peak (core.memsim phase timeline); an explicit "
+                         "--remat-policy becomes the preferred candidate")
     args = ap.parse_args(argv)
     from repro.core.checkpoint import get_plan, parse_size
     if args.remat_policy:

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import checkpoint as CK
 from repro.core import gmm_backend as GB
+from repro.core import memsim
 from repro.data.pipeline import make_batch_iterator
 from repro.models import transformer as T
 from repro.train import checkpointing
@@ -73,6 +74,16 @@ def make_train_step(cfg, tcfg, *, mesh=None, backend=None,
     leading axis and gradients are accumulated in f32 across a ``lax.scan``
     (gradient accumulation — bounds activation memory to one microbatch)."""
     resolved = GB.resolve(backend, config=_config_backend(cfg, tcfg))
+    n_model = 1 if mesh is None else max(mesh.shape.get("model", 1), 1)
+    moe_mode = None
+    if cfg.is_moe:
+        # Fail at construction, not at trace time inside shard_map: an
+        # invalid (moe_parallel, mesh) pairing — e.g. forced 'ep' with
+        # E % n_model != 0 — raises here with a clear message.  The resolved
+        # mode also feeds the budget fit / peak simulation below (a2a
+        # capacity buffers only exist under ep_a2a).
+        from repro.models.moe_block import resolve_moe_parallel
+        moe_mode = resolve_moe_parallel(cfg, mesh)
     if hbm_budget is not None:
         prefer = CK.get_plan(remat_policy) if remat_policy is not None \
             else None
@@ -80,18 +91,12 @@ def make_train_step(cfg, tcfg, *, mesh=None, backend=None,
                      // _dp_shards(mesh), 1)
         resolved_plan = CK.CheckpointPlan.fit(
             cfg, b_live * tcfg.seq_len, hbm_budget, batch=b_live,
-            prefer=prefer).resolved
+            prefer=prefer, mode=moe_mode, n_model=n_model).resolved
     else:
         resolved_plan = CK.resolve_plan(remat_policy,
                                         config=cfg.remat_policy)
     cfg = cfg.replace(gmm_backend=resolved.name,
                       remat_policy=resolved_plan.spec)
-    if cfg.is_moe:
-        # Fail at construction, not at trace time inside shard_map: an
-        # invalid (moe_parallel, mesh) pairing — e.g. forced 'ep' with
-        # E % n_model != 0 — raises here with a clear message.
-        from repro.models.moe_block import resolve_moe_parallel
-        resolve_moe_parallel(cfg, mesh)
 
     def grads_of(params, batch):
         return jax.value_and_grad(
@@ -136,7 +141,24 @@ def make_train_step(cfg, tcfg, *, mesh=None, backend=None,
 
     step_fn.resolved_backend = resolved
     step_fn.resolved_plan = resolved_plan
+    step_fn.peak_sim_bytes = _sim_peak(cfg, tcfg, mesh, resolved_plan.plan)
     return step_fn
+
+
+def _sim_peak(cfg, tcfg, mesh, plan) -> int:
+    """Simulated per-device train-step peak (params + grads + AdamW state +
+    the activation timeline) at the live set of one microbatch on one
+    data-parallel shard — the same accounting slot the budget fit uses."""
+    n_model = 1 if mesh is None else max(mesh.shape.get("model", 1), 1)
+    moe_mode = None
+    if cfg.is_moe:
+        from repro.models.moe_block import resolve_moe_parallel
+        moe_mode = resolve_moe_parallel(cfg, mesh)
+    b = max(tcfg.batch_size // max(tcfg.num_microbatches, 1)
+            // _dp_shards(mesh), 1)
+    return memsim.simulate_peak(cfg, b * tcfg.seq_len, batch=b, plan=plan,
+                                mode=moe_mode, n_model=n_model,
+                                base="train")
 
 
 def compiled_step_memory(cfg, tcfg, *, mesh=None, backend=None) -> dict:
@@ -171,10 +193,12 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
 
     ``step_hook(step, metrics)`` — if given — fires after every step with the
     raw (device) metrics plus ``step_s`` (the step's host wall time),
-    ``gmm_backend`` (the step's resolved grouped-GEMM backend name) and
+    ``gmm_backend`` (the step's resolved grouped-GEMM backend name),
     ``remat_plan`` (the canonical spec of the step's resolved checkpoint
-    plan); the same fields land in ``history`` so callers can track per-step
-    timing and provenance without wrapping the loop.
+    plan) and ``peak_sim_bytes`` (the simulated per-device train-step peak
+    from :mod:`repro.core.memsim`); the same fields land in ``history`` so
+    callers can track per-step timing and provenance without wrapping the
+    loop.
 
     The backend is re-resolved at the top of every step: entering a
     ``use_backend`` scope between steps (e.g. inside ``step_hook``) retargets
@@ -185,6 +209,7 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
         params = T.init_params(key, cfg)
     opt_state = init_adamw(params)
     resolved_plan = CK.resolve_plan(config=cfg.remat_policy)
+    peak_sim_bytes = _sim_peak(cfg, tcfg, mesh, resolved_plan.plan)
     step_fns: dict[str, object] = {}
 
     def step_fn_for(name: str):
@@ -214,7 +239,8 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
             jax.block_until_ready(metrics)
             metrics = dict(metrics, step_s=time.perf_counter() - ts,
                            gmm_backend=resolved.name,
-                           remat_plan=resolved_plan.spec)
+                           remat_plan=resolved_plan.spec,
+                           peak_sim_bytes=peak_sim_bytes)
             step_hook(step, metrics)
         if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
             m = {k: float(v) for k, v in metrics.items()
@@ -224,6 +250,7 @@ def train(cfg, tcfg, *, mesh=None, params=None, log=print,
             m["wall_s"] = time.perf_counter() - t0
             m["gmm_backend"] = resolved.name
             m["remat_plan"] = resolved_plan.spec
+            m["peak_sim_bytes"] = peak_sim_bytes
             history.append(m)
             log(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
                 f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "

@@ -316,34 +316,42 @@ def test_kind_tags_cover_canon():
 
 
 def test_fit_changes_plan_across_budget_levels():
-    """Acceptance: fit demonstrably selects different plans at >= 3 budget
-    levels, and the selection is the cheapest-recompute fitting plan."""
+    """Acceptance (residual accountant, PR 5 semantics — the peak-rank
+    ladder lives in test_memsim): fit demonstrably selects different plans
+    at >= 3 budget levels, cheapest-recompute fitting plan wins."""
     n = 64
     e_min = CK.estimate_saved_bytes(DENSE, "paper_min", n)
     e_pap = CK.estimate_saved_bytes(DENSE, "paper", n)
     assert 0 < e_min < e_pap
-    picks = [CheckpointPlan.fit(DENSE, n, b).plan.spec()
+    picks = [CheckpointPlan.fit(DENSE, n, b, rank="residual").plan.spec()
              for b in (0, e_min, e_pap)]
     assert picks == ["none", "paper_min", "paper"], picks
 
 
 def test_fit_monotonicity():
-    """A larger budget never picks a more-recompute (smaller-save) plan."""
+    """A larger budget never picks a more-recompute (smaller-save) plan —
+    under the residual accountant (saved bytes) and the peak-rank default
+    (recompute bytes) alike."""
     n = 64
     budgets = [0, 10_000, 100_000, 200_000, 250_000, 300_000, 10**9]
-    ests = [CheckpointPlan.fit(DENSE, n, b).plan
+    ests = [CheckpointPlan.fit(DENSE, n, b, rank="residual").plan
             .estimate_saved_bytes(DENSE, n) for b in budgets]
     assert ests == sorted(ests), list(zip(budgets, ests))
+    recs = [CheckpointPlan.fit(DENSE, n, b).timeline.recompute_bytes
+            for b in budgets]
+    assert recs == sorted(recs, reverse=True), list(zip(budgets, recs))
 
 
 def test_fit_prefer_and_table():
     n = 64
     prefer = get_plan("save=qkv")
     e_pref = prefer.estimate_saved_bytes(DENSE, n)
-    fit = CheckpointPlan.fit(DENSE, n, e_pref, prefer=prefer)
+    fit = CheckpointPlan.fit(DENSE, n, e_pref, prefer=prefer,
+                             rank="residual")
     assert fit.plan == prefer                   # fits -> preferred wins
     assert fit.table[0].chosen and fit.table[0].fits
-    fit2 = CheckpointPlan.fit(DENSE, n, e_pref - 1, prefer=prefer)
+    fit2 = CheckpointPlan.fit(DENSE, n, e_pref - 1, prefer=prefer,
+                              rank="residual")
     assert fit2.plan.spec() == "none"           # doesn't fit -> fall through
     assert not fit2.table[0].fits
     assert sum(r.chosen for r in fit2.table) == 1
@@ -351,18 +359,20 @@ def test_fit_prefer_and_table():
 
 def test_fit_reaches_train_step_and_step_hook():
     """Acceptance: the fit-selected plan is baked into the step and surfaces
-    through step_hook (and history)."""
+    through step_hook (and history), alongside the simulated peak."""
     tcfg = TrainConfig(total_steps=1, batch_size=2, seq_len=32, log_every=1)
-    e_min = CK.estimate_saved_bytes(DENSE, "paper_min", 2 * 32)
-    step = make_train_step(DENSE, tcfg, hbm_budget=e_min)
+    step = make_train_step(DENSE, tcfg, hbm_budget=2_220_000)
     assert step.resolved_plan.source == "fit"
     assert step.resolved_plan.spec == "paper_min"
+    assert step.peak_sim_bytes > 0
     hooked = []
     _, _, hist = train(DENSE.replace(remat_policy=PAPER_SPEC), tcfg,
                        log=lambda *a: None,
-                       step_hook=lambda s, m: hooked.append(m["remat_plan"]))
-    assert hooked == [PAPER_SPEC]
+                       step_hook=lambda s, m: hooked.append(
+                           (m["remat_plan"], m["peak_sim_bytes"])))
+    assert hooked == [(PAPER_SPEC, hist[0]["peak_sim_bytes"])]
     assert hist[0]["remat_plan"] == PAPER_SPEC
+    assert hist[0]["peak_sim_bytes"] > 0
 
 
 # ---------------------------------------------------------------------------

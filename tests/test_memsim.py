@@ -1,0 +1,247 @@
+"""Per-phase peak-memory simulator (``core.memsim``) verification.
+
+Covers the PR's acceptance axes:
+  * phase-timeline *component* monotonicity across the recompute ladder
+    (``none`` >= ``paper`` >= ``full`` backward transients; held residuals
+    the other way round) — peaks themselves are NOT monotone, which is the
+    whole point of simulating them;
+  * a2a capacity-buffer accounting appears only under ``ep_a2a``;
+  * ``fit`` with the simulator picks a plan the residual-only accountant
+    rejects (regression pinning the transient-peak case);
+  * the sim-vs-measured parity gate (``bench.memory.sim_parity_failures``)
+    flags out-of-tolerance and missing-counterpart entries.
+"""
+
+import jax
+import pytest
+
+from repro.bench import record as R
+from repro.bench.memory import (SIM_PARITY_TOLERANCE_PCT, bench_config,
+                                bench_dense_config, sim_parity_failures)
+from repro.core import checkpoint as CK
+from repro.core import memsim
+from repro.core.checkpoint import CheckpointPlan, fit_candidates, get_plan
+from repro.models import transformer as T
+
+DENSE = bench_dense_config()
+MOE = bench_config().replace(gmm_backend="segment")
+N = 64          # 2 x 32 tokens — the tier-1 batch everywhere else
+
+
+def _bwd_transients(tl):
+    return [p.transient_bytes for p in tl.phases if p.name.startswith("bwd/")]
+
+
+def _held_at_loss(tl):
+    return next(p.held_bytes for p in tl.phases if p.name == "loss")
+
+
+# ---------------------------------------------------------------------------
+# Timeline structure
+# ---------------------------------------------------------------------------
+
+
+def test_param_bytes_matches_init_shapes():
+    """The analytic per-device parameter count tracks the real init tree."""
+    for cfg in (DENSE, MOE):
+        shapes = jax.eval_shape(
+            lambda k, c=cfg: T.init_params(k, c), jax.random.PRNGKey(0))
+        real = sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(shapes))
+        sim = memsim.param_bytes(cfg)
+        assert abs(sim - real) / real < 0.01, (cfg.name, sim, real)
+    # ep halves only the expert weights
+    single = memsim.param_bytes(MOE)
+    ep = memsim.param_bytes(MOE, n_model=2)
+    experts = (3 * MOE.num_experts * MOE.d_model * MOE.moe_d_ff
+               * 4)                                   # f32 params
+    assert single - ep == experts * MOE.num_layers // 2
+
+
+def test_phase_timeline_shape():
+    tl = memsim.simulate(MOE, N, batch=2, plan=get_plan("paper"))
+    names = [p.name for p in tl.phases]
+    L = MOE.num_layers
+    assert names[:L] == [f"fwd/{k}[{i}]" for i, k in
+                         enumerate(memsim._layer_kinds(MOE))]
+    assert names[L] == "loss"
+    assert names[L + 1:] == [f"bwd/{k}[{i}]" for i, k in reversed(
+        list(enumerate(memsim._layer_kinds(MOE))))]
+    assert tl.peak_bytes == tl.base_bytes + max(
+        p.live_bytes for p in tl.phases)
+    assert tl.peak_phase in names
+    # the rendered table names the peak phase and totals
+    out = tl.table(limit=3)
+    assert tl.peak_phase in out and f"{tl.peak_bytes:,d}" in out
+
+
+def test_base_modes_nest():
+    """acts < grad < train bases; the optimizer phase exists only under
+    ``train``; bad base/mode raise."""
+    plan = get_plan("paper")
+    acts = memsim.simulate(MOE, N, batch=2, plan=plan, base="acts")
+    grad = memsim.simulate(MOE, N, batch=2, plan=plan, base="grad")
+    train = memsim.simulate(MOE, N, batch=2, plan=plan, base="train")
+    assert acts.peak_bytes < grad.peak_bytes < train.peak_bytes
+    assert acts.base_bytes == 0
+    assert not any(p.name == "optimizer" for p in grad.phases)
+    assert any(p.name == "optimizer" for p in train.phases)
+    with pytest.raises(ValueError, match="base"):
+        memsim.simulate(MOE, N, base="bogus")
+    with pytest.raises(ValueError, match="mode"):
+        memsim.simulate(MOE, N, mode="bogus")
+
+
+def test_component_monotonicity_across_recompute_ladder():
+    """Backward transient spikes shrink as plans save more (none >= paper >=
+    full) while held residuals grow the other way (full >= paper >= none).
+    NB the *peaks* are deliberately not monotone — measured ``full`` peaks
+    above ``none`` on the bench MoE config — which is exactly why ``fit``
+    must rank by the simulated timeline, not either component alone."""
+    for cfg in (DENSE, MOE):
+        tls = {n: memsim.simulate(cfg, N, batch=2, plan=get_plan(n),
+                                  base="acts")
+               for n in ("none", "paper", "full")}
+        t_none, t_paper, t_full = (sum(_bwd_transients(tls[n]))
+                                   for n in ("none", "paper", "full"))
+        assert t_none >= t_paper >= t_full, (cfg.name, t_none, t_paper,
+                                             t_full)
+        h_none, h_paper, h_full = (_held_at_loss(tls[n])
+                                   for n in ("none", "paper", "full"))
+        assert h_full >= h_paper >= h_none, (cfg.name, h_full, h_paper,
+                                             h_none)
+        # plan-driven recompute totals follow the ladder and full replays
+        # nothing (its custom-VJP residuals persist instead)
+        assert (tls["none"].recompute_bytes > tls["paper"].recompute_bytes
+                > tls["full"].recompute_bytes == 0)
+
+
+def test_a2a_buffers_only_under_ep_a2a():
+    """Collective (send/recv capacity) bytes appear on MoE phases under
+    ``ep_a2a`` and nowhere else — and match the capacity formula."""
+    plan = get_plan("paper")
+    for mode in ("single", "ep"):
+        tl = memsim.simulate(MOE, N, batch=2, plan=plan, mode=mode,
+                             n_model=2 if mode == "ep" else 1)
+        assert all(p.collective_bytes == 0 for p in tl.phases), mode
+    tl = memsim.simulate(MOE, N, batch=2, plan=plan, mode="ep_a2a",
+                         n_model=2)
+    moe_phases = [p for p in tl.phases if "moe" in p.name]
+    assert moe_phases
+    rows = memsim._a2a_rows(MOE, N, 2)
+    want = 3 * rows * MOE.d_model * 4                 # f32 send/recv/back
+    assert all(p.collective_bytes == want for p in moe_phases)
+    assert all(p.collective_bytes == 0 for p in tl.phases
+               if "moe" not in p.name)
+    # dense stacks never carry collective buffers, whatever the mode
+    tl_d = memsim.simulate(DENSE, N, batch=2, plan=plan, mode="ep_a2a",
+                           n_model=2)
+    assert all(p.collective_bytes == 0 for p in tl_d.phases)
+
+
+# ---------------------------------------------------------------------------
+# fit: simulator vs residual accountant
+# ---------------------------------------------------------------------------
+
+
+def test_fit_candidates_scoped_specs():
+    specs = [p.spec() for p in fit_candidates(MOE)]
+    assert "full;moe:recompute=ffn_yswi" in specs
+    assert ("full;moe:recompute=ffn_a;moe:recompute=ffn_b"
+            ";moe:recompute=ffn_yswi" in specs)
+    dense_specs = [p.spec() for p in fit_candidates(DENSE)]
+    assert not any("moe:" in s for s in dense_specs)
+    assert set(CK.plan_order()) <= set(dense_specs)
+
+
+def test_fit_sim_rejects_residual_accepted_plan():
+    """Regression: the transient-peak case.  At this budget the residual
+    accountant accepts ``paper`` (262 KB of residuals fit easily) but the
+    simulator knows its backward recompute spike overshoots, and picks the
+    cheaper-peak ``none`` instead, naming the responsible phase."""
+    budget = 1_400_000
+    res = CheckpointPlan.fit(DENSE, N, budget, batch=2, rank="residual")
+    assert res.plan.spec() == "paper"
+    assert res.rank == "residual" and res.timeline is None
+    peak = CheckpointPlan.fit(DENSE, N, budget, batch=2, rank="peak",
+                              base="grad")
+    assert peak.plan.spec() == "none"
+    assert peak.timeline is not None
+    assert peak.timeline.peak_bytes <= budget
+    chosen = next(r for r in peak.table if r.chosen)
+    assert chosen.fits and chosen.peak_phase.startswith("bwd/")
+    # the residual-accepted plan is in the table, marked unfit, with the
+    # overshooting phase named
+    paper_row = next(r for r in peak.table if r.spec == "paper")
+    assert not paper_row.fits and paper_row.sim_peak_bytes > budget
+    assert paper_row.peak_phase.startswith("bwd/")
+    with pytest.raises(ValueError, match="rank"):
+        CheckpointPlan.fit(DENSE, N, budget, rank="bogus")
+
+
+def test_fit_peak_rank_budget_ladder():
+    """Under train-base peak ranking the chosen plan's recompute cost is
+    monotone non-increasing in budget, and >= 3 budget levels demonstrably
+    select different plans (incl. the special plans the residual accountant
+    cannot rank)."""
+    budgets = (2_150_000, 2_240_000, 2_300_000, 2_900_000)
+    fits = [CheckpointPlan.fit(DENSE, N, b, batch=2) for b in budgets]
+    picks = [f.plan.spec() for f in fits]
+    assert picks == ["none", "dots", "paper", "full"], picks
+    recs = [f.timeline.recompute_bytes for f in fits]
+    assert recs == sorted(recs, reverse=True), list(zip(budgets, recs))
+
+
+def test_fit_peak_rank_prefer():
+    prefer = get_plan("paper")
+    fit = CheckpointPlan.fit(DENSE, N, 2_900_000, batch=2, prefer=prefer)
+    assert fit.plan == prefer                   # fits -> preferred wins
+    assert fit.table[0].chosen and fit.table[0].spec == "paper"
+    fit2 = CheckpointPlan.fit(DENSE, N, 2_150_000, batch=2, prefer=prefer)
+    assert not fit2.table[0].fits               # prefer overshoots budget
+    assert fit2.plan.spec() == "none"
+    assert sum(r.chosen for r in fit2.table) == 1
+
+
+# ---------------------------------------------------------------------------
+# The parity gate
+# ---------------------------------------------------------------------------
+
+
+def _sim_entry(name, value, tol=SIM_PARITY_TOLERANCE_PCT):
+    return R.entry(name, value, kind="memory", unit="bytes",
+                   tolerance_pct=tol)
+
+
+def test_sim_parity_failures_gate():
+    measured = R.entry("memory/tiny_moe/paper/segment/peak_bytes",
+                       1_000_000, kind="memory", unit="bytes")
+    ok = [_sim_entry("peak_sim/tiny_moe/paper/single", 1_100_000), measured]
+    assert sim_parity_failures(ok) == []
+    # out of tolerance (+30% > 20%)
+    bad = [_sim_entry("peak_sim/tiny_moe/paper/single", 1_300_000), measured]
+    fails = sim_parity_failures(bad)
+    assert len(fails) == 1 and "+30.0%" in fails[0]
+    # sharded modes pair with their own peak_bytes entries, not segment
+    ep = [_sim_entry("peak_sim/tiny_moe/paper/ep", 900_000),
+          R.entry("memory/tiny_moe/paper/ep/peak_bytes", 1_000_000,
+                  kind="memory", unit="bytes")]
+    assert sim_parity_failures(ep) == []
+    # a missing measured counterpart is itself a failure
+    orphan = [_sim_entry("peak_sim/tiny_moe/paper/ep_a2a", 900_000)]
+    fails = sim_parity_failures(orphan)
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_committed_baseline_carries_sim_entries():
+    """The committed BENCH_memory.json must keep the parity-gated entry
+    families (every registry plan x {single, ep, ep_a2a} on the bench MoE
+    config) — the CI legs gate against exactly these names."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_memory.json")
+    entries = {e["name"] for e in json.load(open(path))["entries"]}
+    for plan in CK.plan_order():
+        for mode in ("single", "ep", "ep_a2a"):
+            assert f"peak_sim/tiny_moe/{plan}/{mode}" in entries
+        assert f"peak_sim/tiny_dense/{plan}/single" in entries
