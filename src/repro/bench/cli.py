@@ -116,4 +116,21 @@ def main(argv: list[str] | None = None) -> int:
             print("OK: every peak_sim/* entry within tolerance of its "
                   "measured peak")
         ok = ok and not fails
+
+    # Fused-path pairing gates: the fused MoE layer must save zero (L*k, .)
+    # slot buffers and must not be slower than the unfused Pallas
+    # composition measured in the SAME run (baseline-independent, like the
+    # sim-parity gate — wall time only pairs against itself).
+    from repro.bench.timing import fused_gate_failures
+    for rec in records:
+        if rec["suite"] != "kernels":
+            continue
+        fails = fused_gate_failures(rec["entries"])
+        print("== fused-path same-run gates ==")
+        for line in fails:
+            print(line)
+        if not fails:
+            print("OK: fused path saves no slot buffers and is not slower "
+                  "than the unfused pallas path")
+        ok = ok and not fails
     return 0 if ok else 1

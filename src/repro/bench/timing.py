@@ -11,6 +11,11 @@ calls.  Medians, not means: a single GC pause or CI-runner hiccup must not
 move the recorded number.  Wall-clock entries are informational
 (``tolerance_pct=None``) — this container/CI measures CPU interpret paths —
 while HLO flops/bytes are deterministic and gated.
+
+Exception to "wall time is informational": the ``kernels/fused_path/*``
+entries are pair-gated against each other in the SAME run by
+:func:`fused_gate_failures` (wired into ``repro.bench --check``) — relative
+ordering on one machine is meaningful even when absolute numbers are not.
 """
 
 from __future__ import annotations
@@ -131,6 +136,112 @@ def gmm_backend_entries(S=2048, d=256, h=512, E=8, iters=5, *,
     return out
 
 
+def fused_path_entries(L=128, d=64, h=128, E=8, k=2, iters=3) -> list:
+    """The fused dispatch→GEMM→combine layer vs the unfused Pallas kernel
+    composition it replaces, on one routed MoE shape (interpret mode):
+    median fwd+grad wall time plus the saved-residual accounting — how many
+    ``(L·k, h)`` / ``(L·k, d)`` slot buffers autodiff saves, and their bytes.
+
+    The time entries are informational against the *baseline* (CI wall time
+    drifts) but load-bearing against *each other*:
+    :func:`fused_gate_failures` pairs them in the same run — same machine,
+    same interpreter — exactly like the memory suite's sim-parity gate."""
+    from repro import compat
+    from repro.core.moe_layer import moe_ffn_blaze
+    from repro.core.routing import build_dispatch, top_k_gating
+    from repro.kernels.ops import moe_ffn_blaze_pallas
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (L, d), jnp.float32)
+    wg = jax.random.normal(ks[1], (d, E), jnp.float32) * 0.1
+    w1 = jax.random.normal(ks[2], (E, d, h), jnp.float32) * 0.05
+    w2 = jax.random.normal(ks[3], (E, d, h), jnp.float32) * 0.05
+    w3 = jax.random.normal(ks[4], (E, h, d), jnp.float32) * 0.05
+    g = top_k_gating(x, wg, k)
+    disp = build_dispatch(g.topk_experts, E)
+    gates = g.topk_weights
+    S = L * k
+
+    def layer(label):
+        if label == "fused":
+            def f(x, w1, w2, w3, gates):
+                return moe_ffn_blaze(x, gates, disp, w1, w3, w2,
+                                     backend="pallas_fused")
+        else:
+            def f(x, w1, w2, w3, gates):
+                return moe_ffn_blaze_pallas(x, gates, disp, w1, w3, w2,
+                                            backend="pallas")
+        return f
+
+    def slot_buffers(label):
+        n, nbytes = 0, 0
+        for aval, src in compat.saved_residuals(
+                layer(label), x, w1, w2, w3, gates):
+            if "from the argument" in str(src):
+                continue
+            if getattr(aval, "shape", None) in ((S, h), (S, d)):
+                n += 1
+                nbytes += aval.size * aval.dtype.itemsize
+        return n, nbytes
+
+    def grad_fn(label):
+        f = layer(label)
+
+        def loss(x, w1, w2, w3, gates):
+            return (f(x, w1, w2, w3, gates).astype(jnp.float32) ** 2).sum()
+
+        return jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3, 4)))
+
+    meta = {"L": L, "d": d, "h": h, "E": E, "k": k}
+    out = []
+    for label in ("fused", "unfused_pallas"):
+        us = median_time_us(grad_fn(label), x, w1, w2, w3, gates,
+                            warmup=1, iters=iters)
+        n, nbytes = slot_buffers(label)
+        gated = 0.0 if label == "fused" else None   # fused counts must be 0
+        out.append(entry(f"kernels/fused_path/{label}/time", us,
+                         kind="time_us", unit="us", **meta))
+        out.append(entry(f"kernels/fused_path/{label}/slot_buffers", n,
+                         kind="count", unit="buffers", tolerance_pct=gated,
+                         **meta))
+        out.append(entry(f"kernels/fused_path/{label}/slot_residual_bytes",
+                         nbytes, kind="bytes", unit="bytes",
+                         tolerance_pct=gated, **meta))
+    return out
+
+
+def fused_gate_failures(entries: list) -> list:
+    """Same-run pairing gates for the fused MoE path (the analogue of the
+    memory suite's ``sim_parity_failures``): (1) the fused layer's autodiff
+    must save ZERO ``(L·k, ·)`` slot buffers — the whole point of the
+    fusion — and (2) its fwd+grad wall time must not exceed the unfused
+    Pallas composition measured in the *same* run.  Returns human-readable
+    failure lines (empty == both gates hold)."""
+    by_name = {e["name"]: e for e in entries}
+    pre = "kernels/fused_path"
+    fused_n = by_name.get(f"{pre}/fused/slot_buffers")
+    fused_t = by_name.get(f"{pre}/fused/time")
+    ref_t = by_name.get(f"{pre}/unfused_pallas/time")
+    if fused_n is None and fused_t is None and ref_t is None:
+        # No fused_path family at all (synthetic/legacy record): nothing to
+        # pair.  Fresh runs always emit the family via ``kernels_suite``,
+        # and the CI workflow asserts its presence independently.
+        return []
+    if fused_n is None or fused_t is None or ref_t is None:
+        return [f"FUSED {pre}/* family incomplete in this run "
+                "(regenerate the record with the current suite)"]
+    fails = []
+    if fused_n["value"] != 0:
+        fails.append(f"FUSED {pre}/fused/slot_buffers: "
+                     f"{int(fused_n['value'])} (L*k, .) buffer(s) in the "
+                     "saved-residual set; the fused path must save none")
+    if fused_t["value"] > ref_t["value"]:
+        fails.append(f"FUSED {pre}/fused/time: {fused_t['value']:.0f}us vs "
+                     f"unfused pallas {ref_t['value']:.0f}us in the same "
+                     "run; the fused kernels must not be slower")
+    return fails
+
+
 def train_step_entries(steps: int = 3) -> list:
     """Per-step wall time of the tiny-config train loop, collected through
     ``train.loop``'s ``step_hook`` (the hook the harness regresses against)."""
@@ -164,6 +275,8 @@ def kernels_suite(*, small: bool = False) -> list:
     out += gmm_backend_entries(S=512 if small else 2048,
                                iters=3 if small else 5,
                                include_pallas=small)
+    out += fused_path_entries(L=64 if small else 128,
+                              iters=3 if small else 5)
     out += train_step_entries()
     return out
 

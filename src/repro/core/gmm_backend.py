@@ -22,6 +22,10 @@ instead of a hard import:
     it exists for correctness/portability, not speed.
   * ``pallas``  — the ``kernels/gather_gmm.py`` work-item kernels (identity
     gather; ``interpret=True`` on CPU, real lowering on TPU).
+  * ``pallas_fused`` — same kernels as a backend, plus the ``fused_moe``
+    capability flag: ``moe_ffn_blaze`` routes whole SwiGLU layers through
+    the fused dispatch→GEMM→combine kernel pair (no ``(L·k, ·)``
+    intermediates in HBM, forward or backward).
 
 Selection precedence (``resolve``):
 
@@ -32,9 +36,9 @@ Selection precedence (``resolve``):
   4. the ``REPRO_GMM_BACKEND`` environment variable,
   5. auto (first available of ``ragged``, ``segment``).
 
-``pallas`` is never auto-selected: in interpret mode it is orders of magnitude
-slower than the XLA paths and exists as an explicitly requested
-kernel-validation target.
+``pallas`` / ``pallas_fused`` are never auto-selected: in interpret mode they
+are orders of magnitude slower than the XLA paths and exist as explicitly
+requested kernel-validation targets.
 
     REPRO_GMM_BACKEND=segment python -m pytest -q          # force portable
     gmm(lhs, rhs, sizes, backend="ragged")                  # force fast path
@@ -162,27 +166,22 @@ class SegmentBackend:
 def _pallas_gmm_impl(lhs, rhs, group_sizes):
     from repro.kernels.gather_gmm import gather_gmm
     S = lhs.shape[0]
-    h = rhs.shape[-1]
-    bh = 128 if h % 128 == 0 else h
-    offsets = _offsets_of(group_sizes)
-    out = gather_gmm(lhs, jnp.arange(S, dtype=jnp.int32), offsets, rhs,
-                     epilogue=False, bh=bh, interpret=True)
     # Backend contract: rows past the group-size total belong to no group and
-    # must be exact zeros.  Output tiles no work item visits are never
-    # written by the kernel (uninitialized, not zero) — mask them explicitly,
-    # mirroring the empty-expert zeroing in _pallas_dw_impl.  Rows inside a
-    # visited tile are already zeroed by the in-tile gather mask.
-    rows = jnp.arange(S, dtype=jnp.int32)[:, None]
-    return jnp.where(rows < offsets[-1], out, jnp.zeros((), out.dtype))
+    # are exact zeros.  The kernel now guarantees this itself: rows inside a
+    # visited tile are zeroed by the in-tile gather mask, and tiles no work
+    # item visits are zero-initialized in-kernel by make_work_items' filler
+    # items (``bh`` is likewise clamped to a divisor of h in-kernel).
+    return gather_gmm(lhs, jnp.arange(S, dtype=jnp.int32),
+                      _offsets_of(group_sizes), rhs,
+                      epilogue=False, interpret=True)
 
 
 def _pallas_dw_impl(lhs, dout, group_sizes):
     from repro.kernels.gather_gmm import gmm_dw_pallas
-    dw = gmm_dw_pallas(lhs, dout, _offsets_of(group_sizes), interpret=True)
-    # Blocks of experts with no work items are never written by the
-    # kernel — zero them explicitly.
-    return jnp.where(group_sizes[:, None, None] > 0, dw,
-                     jnp.zeros((), dw.dtype))
+    # Empty experts' (1, d, h) blocks are zero-initialized in-kernel (each
+    # empty expert gets a dedicated efirst filler item) — no caller-side
+    # masking needed.
+    return gmm_dw_pallas(lhs, dout, _offsets_of(group_sizes), interpret=True)
 
 
 # ``pallas_call`` has no JVP rule, so the kernels are wrapped in custom VJPs
@@ -254,12 +253,34 @@ class PallasBackend:
         return _pallas_dw(lhs, dout, group_sizes)
 
 
+class PallasFusedBackend(PallasBackend):
+    """Fully fused dispatch→GEMM→combine Pallas path (SonicMoE-style).
+
+    As a grouped-GEMM backend it behaves exactly like ``pallas`` (same
+    work-item kernels — the parity suite covers it for free); the extra
+    ``fused_moe`` capability flag makes ``moe_ffn_blaze`` route SwiGLU
+    layers to ``kernels.ops.moe_ffn_blaze_fused``, where the second grouped
+    GEMM and the gated combine run inside the same grid pass and the
+    backward replays the gather in-kernel — no ``(L·k, h)`` / ``(L·k, d)``
+    intermediate exists in HBM in either direction.  Tile sizes come from
+    ``repro.roofline.select_moe_tiles``.  Never auto-selected (interpret
+    mode on CPU); request it explicitly like ``pallas``.
+    """
+
+    name = "pallas_fused"
+
+    #: capability flag: ``moe_ffn_blaze`` routes whole SwiGLU MoE layers
+    #: through the fused kernel pair instead of composing gmm/gmm_dw calls.
+    fused_moe = True
+
+
 # ---------------------------------------------------------------------------
 # Registry + selection
 # ---------------------------------------------------------------------------
 
 _REGISTRY: dict[str, object] = {
-    b.name: b for b in (RaggedBackend, SegmentBackend, PallasBackend)
+    b.name: b for b in (RaggedBackend, SegmentBackend, PallasBackend,
+                        PallasFusedBackend)
 }
 
 

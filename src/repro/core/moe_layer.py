@@ -33,7 +33,10 @@ The grouped GEMMs go through the pluggable backend registry in
 ``repro.core.gmm_backend`` (``ragged`` = ``jax.lax.ragged_dot[_general]``
 where available, ``segment`` = portable pure-jnp fallback, ``pallas`` = the
 ``repro.kernels`` work-item kernels); select per call via ``backend=`` or
-globally via ``REPRO_GMM_BACKEND``.
+globally via ``REPRO_GMM_BACKEND``.  The ``pallas_fused`` backend short-
+circuits the whole SwiGLU layer into the fused dispatch→GEMM→combine kernel
+pair (``repro.kernels.ops.moe_ffn_blaze_fused``) — no ``(L·k, ·)``
+intermediate exists in HBM in either direction.
 """
 
 from __future__ import annotations
@@ -253,6 +256,14 @@ def moe_ffn_blaze(x: jax.Array, gates: jax.Array, dispatch: Dispatch,
     d = dispatch
     if activation == "swiglu":
         assert w2 is not None
+        from repro.core.gmm_backend import get_backend
+        if getattr(get_backend(backend), "fused_moe", False):
+            # Fused dispatch→GEMM→combine kernel pair: the backward replays
+            # the gather and recomputes A/B/SiLU in-kernel, so its residual
+            # set (x + weights + gates) is strictly below even the "x" mode —
+            # every requested mode is satisfied a fortiori.
+            from repro.kernels.ops import moe_ffn_blaze_fused
+            return moe_ffn_blaze_fused(x, gates, d, w1, w3, w2)
         return _moe_swiglu(residuals, backend, x, w1, w2, w3, gates,
                            d.expert_token_indices, d.expert_token_offsets,
                            d.token_index_map, d.expert_lengths)

@@ -4,6 +4,11 @@ Each token gathers its ``k`` partial expert outputs through
 ``token_index_map`` and contracts them with its gate weights — the
 deterministic, gather-based TPU rendering of the paper's on-the-fly reduction
 (no scatter, no materialized (L·k, d) buffer; see DESIGN.md §2).
+
+This standalone kernel serves the *unfused* composition
+(``kernels.ops.moe_ffn_blaze_pallas``).  The fused path
+(``gather_gmm.fused_moe_fwd``) folds the same combine into the grouped-GEMM
+grid pass as its epilogue — there the (S, d) partials input never exists.
 """
 
 from __future__ import annotations
@@ -38,12 +43,16 @@ def _combine_kernel(tim_ref, p_ref, g_ref, y_ref, *, bl: int, k: int,
 @functools.partial(jax.jit, static_argnames=("bl", "bd", "interpret"))
 def combine(p_out: jax.Array, token_index_map: jax.Array, gates: jax.Array,
             *, bl: int = 128, bd: int = 512, interpret: bool = True):
-    """(S, d) partials + (L, k) map + (L, k) gates -> (L, d) output."""
+    """(S, d) partials + (L, k) map + (L, k) gates -> (L, d) output.
+
+    ``bd`` is clamped to the largest divisor of ``d`` (same contract as the
+    ``bh`` clamp in ``gather_gmm``: any width traces, non-divisible ones
+    just run a narrower tile)."""
+    from repro.kernels.gather_gmm import largest_divisor_tile
     S, d = p_out.shape
     L, k = token_index_map.shape
     bl = min(bl, L)
-    bd = min(bd, d)
-    assert d % bd == 0
+    bd = largest_divisor_tile(d, bd)
     L_pad = ((L + bl - 1) // bl) * bl
     tim = token_index_map.reshape(-1).astype(jnp.int32)
     g = jnp.pad(gates, ((0, L_pad - L), (0, 0)))

@@ -1,5 +1,6 @@
 """Gather-GMM: grouped expert GEMMs with on-the-fly token gather (paper §3.1
-+ §5.2), as a Pallas TPU kernel.
++ §5.2), as a Pallas TPU kernel — plus the fully fused
+dispatch→GEMM→combine MoE kernels built on the same work-item grid.
 
 This is the kernel rendering of the paper's central claim: the expert MLPs
 consume **non-materialized** routed tokens.  The `(L·k, d)` routed buffer
@@ -9,19 +10,54 @@ never exists in HBM; instead the kernel is driven by the scalar-prefetched
 SwiGLU branches at once, sharing the single read of the gathered rows), and
 applies the SiLU·gate epilogue in VMEM.
 
+:func:`fused_moe_fwd` / :func:`fused_moe_bwd` take the fusion end to end
+(SonicMoE-style IO-aware epilogue fusion): the second grouped GEMM
+(``y_swi @ w3[e]``) runs in the same grid pass, and each slot's gated partial
+is scatter-accumulated straight into the `(L, d)` output through the same
+index metadata — the gather-of-partials combine of ``kernels/combine.py``
+becomes the kernel's epilogue, so neither the `(L·k, h)` SwiGLU product nor
+the `(L·k, d)` partials ever exist in HBM.  The backward replays the gather
+in-kernel and produces dx / dgates / dw1 / dw2 / dw3 from one grid sweep,
+again with no `(L·k, ·)` residual.  The fused kernels express both the
+gather and the scatter-accumulate as one-hot matmuls against a per-item
+``(bl, L)`` dispatch matrix built in VMEM (``sel @ x`` / ``selᵀ @ v`` — MXU
+work instead of per-row dynamic slices; exact, since entries are 0/1 with at
+most one hit per row).
+
 Group-crossing tiles are handled MegaBlocks-style: the wrapper precomputes a
 static work-item list (one item per (row-tile × overlapping expert); at most
 ``n_tiles + E`` items) whose metadata — tile id, expert id, row range inside
-the tile, first-visit flag — is scalar-prefetched so that the weight
+the tile, first-visit flags — is scalar-prefetched so that the weight
 BlockSpec's ``index_map`` can select ``w[expert]`` per work item.  Output
 tiles visited by several experts are accumulated in VMEM across consecutive
 grid steps (TPU grids are sequential per core).
 
-On this CPU container the kernel runs in ``interpret=True`` mode; ``x`` is
+Work-item contracts (hardened; see :func:`make_work_items`):
+
+  * every output row tile is zero-initialized in-kernel — tiles no expert
+    touches get a dedicated filler item with ``first=1``, so trailing dead
+    rows are exact zeros, not uninitialized memory;
+  * every expert's weight-gradient block is zero-initialized in-kernel —
+    empty experts get a dedicated filler item with ``efirst=1``, so callers
+    no longer have to mask ``gmm_dw_pallas`` outputs;
+  * the all-empty case (``n_valid == 0``, e.g. an ``ep_a2a`` shard whose
+    tokens were all dropped) degenerates to pure no-op items that still
+    zero-initialize every output block.
+
+Tile sizes: ``bl``/``bh`` are *requests*; ``bh`` is clamped to the largest
+divisor of ``h`` (non-multiple-of-128 FFN widths work, they just run a
+narrower tile) and ``bl`` to the padded row count.  Callers that want
+hardware-informed sizes ask ``repro.roofline.select_moe_tiles`` (the
+arithmetic-intensity model) instead of hard-coding 128.
+
+On this CPU container the kernels run in ``interpret=True`` mode; ``x`` is
 held as a single VMEM block for kernel-scale shapes.  On a real TPU the same
 grid/work-item structure applies with ``x`` in ``ANY`` (HBM) memory space and
 per-row ``make_async_copy`` gathers — the row (``d`` contiguous elements) is
-the natural DMA unit, see DESIGN.md §2.
+the natural DMA unit, see DESIGN.md §2.  (The filler items appended by the
+hardened :func:`make_work_items` revisit some output blocks non-adjacently;
+on a real TPU grid they must be folded into the per-block visit order —
+tracked under the ROADMAP real-hardware item.)
 """
 
 from __future__ import annotations
@@ -38,17 +74,54 @@ def _silu(a):
     return a * jax.nn.sigmoid(a)
 
 
+def _dsilu(a):
+    s = jax.nn.sigmoid(a)
+    return s * (1.0 + a * (1.0 - s))
+
+
+def largest_divisor_tile(n: int, b: int) -> int:
+    """Largest divisor of ``n`` that is ``<= b`` (static Python ints).
+
+    The tile-size clamp for block dimensions that must divide the array
+    dimension exactly: ``largest_divisor_tile(192, 128) == 96``.  Always
+    >= 1, so any positive ``n`` has a valid tiling.
+    """
+    b = max(1, min(int(b), int(n)))
+    while n % b:
+        b -= 1
+    return b
+
+
 def make_work_items(offsets: jax.Array, n_tiles: int, bl: int,
                     num_experts: int):
     """Static-shape (tile × expert) work-item metadata.
 
     Returns int32 arrays of length ``W = n_tiles + num_experts``:
       (tile, expert, lo, hi, first, efirst) — ``[lo, hi)`` is the row range
-    of ``expert`` inside ``tile``; ``first`` marks the first item of each tile
-    and ``efirst`` the first item of each *expert* (whichever output block the
-    kernel accumulates into must be initialized on its first visit).  Invalid
-    trailing items point at the last tile / the last valid item's expert with
-    an empty range (benign += 0, and adjacent to the block they revisit).
+    of ``expert`` inside ``tile``; ``first`` marks the first item visiting
+    each *tile's* output block and ``efirst`` the first item visiting each
+    *expert's* block (whichever output block a kernel accumulates into must
+    be initialized on its first visit).
+
+    The trailing (invalid) items are structured fillers, not garbage:
+
+      1. one item per **unvisited tile** (no expert has rows there — dead
+         rows past the group totals) carrying ``first=1`` and an empty row
+         range, so row-tiled outputs are zero-initialized in-kernel;
+      2. one item per **empty expert** carrying ``efirst=1`` and an empty
+         range, so per-expert outputs (the dw kernels) are zero-initialized
+         in-kernel;
+      3. any remaining items are benign no-ops on already-initialized blocks
+         (last tile / last valid expert, empty range, flags clear).
+
+    Counting argument for why the fillers always fit: contiguous expert row
+    ranges over ``T`` tiles give ``n_valid <= T_visited + E_nonempty - 1``
+    (0 when nothing is routed), so ``W - n_valid >= #unvisited_tiles +
+    #empty_experts`` always holds — including the fully degenerate
+    ``n_valid == 0`` case, where the items are exactly one ``first`` filler
+    per tile followed by one ``efirst`` filler per expert (all-empty input
+    produces well-defined, all-zero outputs instead of self-referential
+    metadata).
     """
     E = num_experts
     W = n_tiles + E
@@ -63,7 +136,7 @@ def make_work_items(offsets: jax.Array, n_tiles: int, bl: int,
 
     def scatter(vals, fill):
         out = jnp.full((W,), fill, jnp.int32)
-        return out.at[jnp.where(flat_valid, rank, W - 1)].set(
+        return out.at[jnp.where(flat_valid, rank, W)].set(
             jnp.where(flat_valid, vals.reshape(-1).astype(jnp.int32), fill),
             mode="drop")
 
@@ -77,9 +150,9 @@ def make_work_items(offsets: jax.Array, n_tiles: int, bl: int,
     wi_hi = scatter(hi, 0)
     wi_first = scatter(first, 0)
     wi_efirst = scatter(efirst, 0)
-    # Anything at rank >= n_valid is a filler: empty range on the last tile,
-    # pointing at the last valid item's expert so block revisits stay
-    # adjacent (TPU grids flush an output block once it stops being visited).
+    # Benign filler base: empty range on the last tile, pointing at the last
+    # valid item's expert (expert 0 when nothing is valid) so block revisits
+    # only ever touch initialized blocks.
     fill_mask = jnp.arange(W) >= n_valid
     last_expert = wi_expert[jnp.maximum(n_valid - 1, 0)]
     wi_tile = jnp.where(fill_mask, n_tiles - 1, wi_tile)
@@ -88,6 +161,22 @@ def make_work_items(offsets: jax.Array, n_tiles: int, bl: int,
     wi_hi = jnp.where(fill_mask, 0, wi_hi)
     wi_first = jnp.where(fill_mask, 0, wi_first)
     wi_efirst = jnp.where(fill_mask, 0, wi_efirst)
+    # Filler class 1: unvisited tiles get a `first=1` item each, directly
+    # after the valid items, so their output blocks are zeroed in-kernel.
+    ut = ~valid.any(axis=1)                                      # (T,)
+    ut_rank = n_valid + jnp.cumsum(ut) - ut
+    ut_idx = jnp.where(ut, ut_rank, W)
+    tile_ids = jnp.arange(n_tiles, dtype=jnp.int32)
+    wi_tile = wi_tile.at[ut_idx].set(tile_ids, mode="drop")
+    wi_first = wi_first.at[ut_idx].set(1, mode="drop")
+    # Filler class 2: empty experts get an `efirst=1` item each (after the
+    # tile fillers, so the last tile's block they sit on is initialized).
+    ue = ~valid.any(axis=0)                                      # (E,)
+    ue_rank = n_valid + ut.sum() + jnp.cumsum(ue) - ue
+    ue_idx = jnp.where(ue, ue_rank, W)
+    expert_ids = jnp.arange(E, dtype=jnp.int32)
+    wi_expert = wi_expert.at[ue_idx].set(expert_ids, mode="drop")
+    wi_efirst = wi_efirst.at[ue_idx].set(1, mode="drop")
     return wi_tile, wi_expert, wi_lo, wi_hi, wi_first, wi_efirst
 
 
@@ -149,19 +238,23 @@ def gather_gmm(x: jax.Array, idx: jax.Array, offsets: jax.Array,
       w1: (E, d, h); w2: optional (E, d, h) SwiGLU gate branch.
       epilogue: apply ``silu(a)·b`` (requires w2).
       save_ab: also return the checkpointed GEMM outputs a (and b).
+      bl/bh: row/hidden tile-size *requests* — ``bh`` is clamped to the
+        largest divisor of ``h`` (any FFN width traces; a non-multiple of
+        128 just runs a narrower tile) and ``bl`` to the padded row count.
 
     Returns ``y`` of shape (S, h) — or ``(y, a[, b])`` when ``save_ab``.
+    Output rows past ``offsets[-1]`` belong to no group and are exact zeros
+    (unvisited tiles are zero-initialized in-kernel by the filler items).
     """
     S, = idx.shape
     L, d = x.shape
     E, _, h = w1.shape
     dual = w2 is not None
     bl = min(bl, max(S, 8))
-    bh = min(bh, h)
+    bh = largest_divisor_tile(h, bh)
     S_pad = ((S + bl - 1) // bl) * bl
     idx_p = jnp.pad(idx.astype(jnp.int32), (0, S_pad - S))
     n_tiles = S_pad // bl
-    assert h % bh == 0
     nh = h // bh
     wi_tile, wi_expert, wi_lo, wi_hi, wi_first, _ = make_work_items(
         offsets.astype(jnp.int32), n_tiles, bl, E)
@@ -228,6 +321,394 @@ def gather_gmm(x: jax.Array, idx: jax.Array, offsets: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Fully fused dispatch -> grouped GEMMs -> combine (forward)
+# ---------------------------------------------------------------------------
+
+
+def _onehot_select(idx_ref, lo, hi, n_rows: int, bl: int):
+    """(bl, n_rows) one-hot dispatch matrix for this work item: row r is
+    one-hot at token ``idx[r]`` when r lies in the item's [lo, hi) slot
+    range, all-zero otherwise.  Gather is ``sel @ x`` and scatter-accumulate
+    is ``selᵀ @ v`` — both MXU matmuls, no per-row dynamic slices (the
+    classic TPU dispatch idiom; exact in f32 since entries are 0/1 and each
+    row has at most one hit)."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bl, 1), 0)
+    active = (rows >= lo) & (rows < hi)
+    toks = jnp.where(active, idx_ref[...].astype(jnp.int32), -1)   # (bl, 1)
+    return (toks == jax.lax.broadcasted_iota(jnp.int32, (bl, n_rows), 1)
+            ).astype(jnp.float32)
+
+
+def _fused_kernel(tile_ref, expert_ref, lo_ref, hi_ref,
+                  idx_ref, x_ref, g_ref, w1_ref, w2_ref, w3_ref, y_ref,
+                  xt_ref, pacc_ref, *, bl: int, nh: int):
+    wi = pl.program_id(0)
+    hh = pl.program_id(1)
+    lo, hi = lo_ref[wi], hi_ref[wi]
+    sel = _onehot_select(idx_ref, lo, hi, y_ref.shape[0], bl)
+
+    @pl.when((wi == 0) & (hh == 0))
+    def _init_out():
+        # The (L, d) accumulator is one persistent block: zero it once.
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(hh == 0)
+    def _gather():
+        # On-the-fly dispatch: this item's rows, gathered once per work item
+        # (the scratch persists across the sequential hh steps).
+        xt_ref[...] = jax.lax.dot_general(
+            sel, x_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(xt_ref.dtype)
+
+    xt = xt_ref[...]
+    a = jnp.dot(xt, w1_ref[0], preferred_element_type=jnp.float32)
+    b = jnp.dot(xt, w2_ref[0], preferred_element_type=jnp.float32)
+    y_swi = _silu(a) * b                       # (bl, bh), VMEM-only
+    # Round to the I/O dtype at the GEMM boundary — the same place the
+    # unfused path materializes y_swi — so fused-vs-unfused stays within
+    # reduction-order noise even in bf16 (identity in f32).
+    y_swi = y_swi.astype(xt_ref.dtype).astype(jnp.float32)
+    # Second grouped GEMM, this h-block's contribution: (bl, bh) @ (bh, d).
+    p = jax.lax.dot_general(y_swi, w3_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(hh == 0)
+    def _p_init():
+        pacc_ref[...] = p
+
+    @pl.when(hh > 0)
+    def _p_acc():
+        pacc_ref[...] += p
+
+    @pl.when(hh == nh - 1)
+    def _combine():
+        # Fused combine epilogue: once the h-contraction is complete,
+        # scatter-accumulate each slot's gated partial into y[token] through
+        # the same one-hot dispatch matrix the gather used (this is
+        # kernels/combine.py folded into the grid pass — no (L*k, d)
+        # partials buffer ever exists).  ``selᵀ @ gated`` routes slot r's
+        # partial to y[idx[r]]; inactive rows have an all-zero sel row.
+        gated = g_ref[...].astype(jnp.float32) * pacc_ref[...]
+        y_ref[...] += jax.lax.dot_general(
+            sel, gated, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "bh", "interpret"))
+def fused_moe_fwd(x: jax.Array, g_slot: jax.Array, idx: jax.Array,
+                  offsets: jax.Array, w1: jax.Array, w2: jax.Array,
+                  w3: jax.Array, *, bl: int = 128, bh: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """Fused dispatch→GEMM→combine SwiGLU MoE forward.
+
+    One grid pass over the work items computes, per (row tile × expert ×
+    h-block): the on-the-fly gather of ``x`` rows, both first-layer GEMMs,
+    the SiLU·gate epilogue, the second grouped GEMM, and the gated
+    scatter-accumulate of each slot's partial into the ``(L, d)`` output —
+    no ``(L·k, h)`` or ``(L·k, d)`` intermediate is ever written to HBM.
+
+    Args:
+      x: (L, d) unpermuted activations.
+      g_slot: (S,) per-slot gate weights in expert order (the (L, k) gates
+        scattered through ``token_index_map``).
+      idx: (S,) ``expert_token_indices``; offsets: (E+1,) prefix sums.
+      w1, w2: (E, d, h); w3: (E, h, d).
+      bl/bh: tile requests (``bh`` clamped to a divisor of ``h``); ask
+        ``repro.roofline.select_moe_tiles`` for hardware-informed sizes.
+
+    Returns the combined (L, d) output in fp32 (full-precision accumulation
+    across h-blocks and the k slots; cast at the call site).
+    """
+    S, = idx.shape
+    L, d = x.shape
+    E, _, h = w1.shape
+    bl = min(bl, max(S, 8))
+    bh = largest_divisor_tile(h, bh)
+    S_pad = ((S + bl - 1) // bl) * bl
+    idx_p = jnp.pad(idx.astype(jnp.int32), (0, S_pad - S))
+    g_pad = jnp.pad(g_slot, (0, S_pad - S)).reshape(S_pad, 1)
+    n_tiles = S_pad // bl
+    nh = h // bh
+    wi_tile, wi_expert, wi_lo, wi_hi, _, _ = make_work_items(
+        offsets.astype(jnp.int32), n_tiles, bl, E)
+    W = wi_tile.shape[0]
+
+    def x_map(wi, hh, *scalars):
+        return (0, 0)
+
+    def g_map(wi, hh, *scalars):
+        return (scalars[0][wi], 0)      # wi_tile
+
+    def w12_map(wi, hh, *scalars):
+        return (scalars[1][wi], 0, hh)  # wi_expert
+
+    def w3_map(wi, hh, *scalars):
+        return (scalars[1][wi], hh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(W, nh),
+        in_specs=[
+            pl.BlockSpec((bl, 1), g_map),   # idx, tiled like the gates
+            pl.BlockSpec((L, d), x_map),
+            pl.BlockSpec((bl, 1), g_map),
+            pl.BlockSpec((1, d, bh), w12_map),
+            pl.BlockSpec((1, d, bh), w12_map),
+            pl.BlockSpec((1, bh, d), w3_map),
+        ],
+        out_specs=pl.BlockSpec((L, d), x_map),
+        scratch_shapes=[pltpu.VMEM((bl, d), x.dtype),
+                        pltpu.VMEM((bl, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, bl=bl, nh=nh),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, d), jnp.float32),
+        interpret=interpret,
+    )(wi_tile, wi_expert, wi_lo, wi_hi,
+      idx_p.reshape(S_pad, 1), x, g_pad, w1, w2, w3)
+
+
+# ---------------------------------------------------------------------------
+# Fully fused backward: replay the gather in-kernel, produce every gradient
+# ---------------------------------------------------------------------------
+
+
+def _fused_bwd_kernel(tile_ref, expert_ref, lo_ref, hi_ref,
+                      first_ref, efirst_ref,
+                      idx_ref, x_ref, dy_ref, g_ref, w1_ref, w2_ref, w3_ref,
+                      dx_ref, dg_ref, dw1_ref, dw2_ref, dw3_ref,
+                      xt_ref, dyt_ref, dxacc_ref, *, bl: int, nh: int):
+    wi = pl.program_id(0)
+    hh = pl.program_id(1)
+    lo, hi = lo_ref[wi], hi_ref[wi]
+    first = first_ref[wi] == 1
+    efirst = efirst_ref[wi] == 1
+    sel = _onehot_select(idx_ref, lo, hi, dx_ref.shape[0], bl)
+
+    @pl.when((wi == 0) & (hh == 0))
+    def _init_dx():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    @pl.when(hh == 0)
+    def _gather():
+        # Replay the dispatch gather for x AND expand the (L, d) output
+        # grads to this item's slots — neither buffer was saved.
+        rows_c = (((1,), (0,)), ((), ()))
+        xt_ref[...] = jax.lax.dot_general(
+            sel, x_ref[...].astype(jnp.float32), rows_c,
+            preferred_element_type=jnp.float32).astype(xt_ref.dtype)
+        dyt_ref[...] = jax.lax.dot_general(
+            sel, dy_ref[...].astype(jnp.float32), rows_c,
+            preferred_element_type=jnp.float32).astype(dyt_ref.dtype)
+
+    xt = xt_ref[...]
+    dyt = dyt_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)               # (bl, 1)
+    # Recompute A, B, SiLU for this h-block (Algorithm 1's smart checkpoint,
+    # taken to its deepest point: nothing but x and the weights was saved).
+    a = jnp.dot(xt, w1_ref[0], preferred_element_type=jnp.float32)
+    b = jnp.dot(xt, w2_ref[0], preferred_element_type=jnp.float32)
+    sa = _silu(a)
+    # Recomputed y_swi and the cotangent dyu are rounded to the I/O dtype,
+    # matching the buffers the unfused backward reads (identity in f32).
+    y_swi = (sa * b).astype(xt_ref.dtype).astype(jnp.float32)
+    # dY_swi through the transposed third GEMM: (bl, d) x (bh, d) -> (bl, bh)
+    dyu = jax.lax.dot_general(dyt, w3_ref[0].astype(jnp.float32),
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    dyu = dyu.astype(xt_ref.dtype).astype(jnp.float32)
+    dy_swi = dyu * g
+    da = dy_swi * b * _dsilu(a)
+    db = dy_swi * sa
+
+    def acc(ref, val, init):
+        @pl.when(init)
+        def _init():
+            ref[...] = val.astype(ref.dtype)
+
+        @pl.when(jnp.logical_not(init))
+        def _acc():
+            ref[...] += val.astype(ref.dtype)
+
+    # dgates, in slot order: rows outside [lo, hi) contribute exact zeros
+    # (their xt/dyt rows are zeroed), so the per-tile block accumulates
+    # cleanly across the tile's items and the h-blocks.
+    acc(dg_ref, jnp.sum(y_swi * dyu, axis=1, keepdims=True),
+        first & (hh == 0))
+    rows_t = (((0,), (0,)), ((), ()))
+    xt32 = xt.astype(jnp.float32)
+    acc(dw1_ref, jax.lax.dot_general(
+        xt32, da, rows_t, preferred_element_type=jnp.float32)[None], efirst)
+    acc(dw2_ref, jax.lax.dot_general(
+        xt32, db, rows_t, preferred_element_type=jnp.float32)[None], efirst)
+    acc(dw3_ref, jax.lax.dot_general(
+        y_swi * g, dyt, rows_t, preferred_element_type=jnp.float32)[None],
+        efirst)
+
+    # Token gradients: accumulate over h-blocks, scatter once per work item.
+    dxg = (jax.lax.dot_general(da, w1_ref[0].astype(jnp.float32),
+                               (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+           + jax.lax.dot_general(db, w2_ref[0].astype(jnp.float32),
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32))
+
+    @pl.when(hh == 0)
+    def _dx_init():
+        dxacc_ref[...] = dxg
+
+    @pl.when(hh > 0)
+    def _dx_acc():
+        dxacc_ref[...] += dxg
+
+    @pl.when(hh == nh - 1)
+    def _dx_scatter():
+        # selᵀ routes each slot's accumulated dx back to its token row
+        # (inactive rows have all-zero sel rows, so they contribute nothing).
+        dx_ref[...] += jax.lax.dot_general(
+            sel, dxacc_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "bh", "interpret"))
+def fused_moe_bwd(x: jax.Array, dy: jax.Array, g_slot: jax.Array,
+                  idx: jax.Array, offsets: jax.Array, w1: jax.Array,
+                  w2: jax.Array, w3: jax.Array, *, bl: int = 128,
+                  bh: int = 128, interpret: bool = True):
+    """Backward of :func:`fused_moe_fwd` in one grid sweep.
+
+    Replays the dispatch gather in-kernel (both ``x`` rows and the slot
+    expansion of ``dy``), recomputes A/B/SiLU per h-block, and accumulates
+    all five gradients — no ``(L·k, ·)`` buffer is read from or written to
+    HBM.  Empty experts' dw blocks and dead row tiles are zero-initialized
+    by the work-item fillers.
+
+    Returns ``(dx (L, d), dgates_slot (S,), dw1, dw2, dw3)`` in fp32.
+    """
+    S, = idx.shape
+    L, d = x.shape
+    E, _, h = w1.shape
+    bl = min(bl, max(S, 8))
+    bh = largest_divisor_tile(h, bh)
+    S_pad = ((S + bl - 1) // bl) * bl
+    idx_p = jnp.pad(idx.astype(jnp.int32), (0, S_pad - S))
+    g_pad = jnp.pad(g_slot, (0, S_pad - S)).reshape(S_pad, 1)
+    n_tiles = S_pad // bl
+    nh = h // bh
+    wi_tile, wi_expert, wi_lo, wi_hi, wi_first, wi_efirst = make_work_items(
+        offsets.astype(jnp.int32), n_tiles, bl, E)
+    W = wi_tile.shape[0]
+
+    def full_map(wi, hh, *scalars):
+        return (0, 0)
+
+    def g_map(wi, hh, *scalars):
+        return (scalars[0][wi], 0)      # wi_tile
+
+    def w12_map(wi, hh, *scalars):
+        return (scalars[1][wi], 0, hh)  # wi_expert
+
+    def w3_map(wi, hh, *scalars):
+        return (scalars[1][wi], hh, 0)
+
+    def dw12_map(wi, hh, *scalars):
+        return (scalars[1][wi], 0, hh)
+
+    def dw3_map(wi, hh, *scalars):
+        return (scalars[1][wi], hh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(W, nh),
+        in_specs=[
+            pl.BlockSpec((bl, 1), g_map),   # idx, tiled like the gates
+            pl.BlockSpec((L, d), full_map),
+            pl.BlockSpec((L, d), full_map),
+            pl.BlockSpec((bl, 1), g_map),
+            pl.BlockSpec((1, d, bh), w12_map),
+            pl.BlockSpec((1, d, bh), w12_map),
+            pl.BlockSpec((1, bh, d), w3_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, d), full_map),
+            pl.BlockSpec((bl, 1), g_map),
+            pl.BlockSpec((1, d, bh), dw12_map),
+            pl.BlockSpec((1, d, bh), dw12_map),
+            pl.BlockSpec((1, bh, d), dw3_map),
+        ],
+        scratch_shapes=[pltpu.VMEM((bl, d), x.dtype),
+                        pltpu.VMEM((bl, d), dy.dtype),
+                        pltpu.VMEM((bl, d), jnp.float32)],
+    )
+    dx, dg, dw1, dw2, dw3 = pl.pallas_call(
+        functools.partial(_fused_bwd_kernel, bl=bl, nh=nh),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((L, d), jnp.float32),
+            jax.ShapeDtypeStruct((S_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((E, d, h), jnp.float32),
+            jax.ShapeDtypeStruct((E, d, h), jnp.float32),
+            jax.ShapeDtypeStruct((E, h, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(wi_tile, wi_expert, wi_lo, wi_hi, wi_first, wi_efirst,
+      idx_p.reshape(S_pad, 1), x, dy, g_pad, w1, w2, w3)
+    return dx, dg[:S, 0], dw1, dw2, dw3
+
+
+# ---------------------------------------------------------------------------
+# Row gather (the a2a send-buffer builder)
+# ---------------------------------------------------------------------------
+
+
+def _gather_rows_kernel(rows_ref, src_ref, out_ref, *, bl: int):
+    t = pl.program_id(0)
+
+    def row(r, _):
+        rid = rows_ref[t * bl + r]
+        active = rid >= 0
+        src = pl.load(src_ref, (pl.ds(jnp.maximum(rid, 0), 1), slice(None)))
+        out_ref[pl.ds(r, 1), :] = jnp.where(active, src, 0)
+        return 0
+
+    jax.lax.fori_loop(0, bl, row, 0, unroll=False)
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "interpret"))
+def gather_rows_pallas(src: jax.Array, row_ids: jax.Array, *, bl: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """Build an (N, d) row buffer straight from ``src`` rows: ``out[i] =
+    src[row_ids[i]]``, with ``row_ids[i] < 0`` producing an exact zero row.
+
+    This is the ``ep_a2a`` send-buffer builder: the buffer is filled from
+    the dispatch metadata inside the kernel — no intermediate (L·k, d)
+    gathered copy is materialized before the scatter into rank order.
+    """
+    N, = row_ids.shape
+    L, d = src.shape
+    bl = min(bl, max(N, 8))
+    N_pad = ((N + bl - 1) // bl) * bl
+    rows_p = jnp.pad(row_ids.astype(jnp.int32), (0, N_pad - N),
+                     constant_values=-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N_pad // bl,),
+        in_specs=[pl.BlockSpec((L, d), lambda t, *s: (0, 0))],
+        out_specs=pl.BlockSpec((bl, d), lambda t, *s: (t, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_gather_rows_kernel, bl=bl),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N_pad, d), src.dtype),
+        interpret=interpret,
+    )(rows_p, src)
+    return out[:N]
+
+
+# ---------------------------------------------------------------------------
 # Grouped weight gradient on the same work-item machinery
 # ---------------------------------------------------------------------------
 
@@ -269,8 +750,9 @@ def gmm_dw_pallas(lhs: jax.Array, dout: jax.Array, offsets: jax.Array,
     accumulation pattern TPU grids require.  Cross-tile partials genuinely
     overlap (unlike the forward's disjoint row ranges), so the output is
     fp32 and cast to ``lhs.dtype`` only at the end — the backend contract's
-    fp32 accumulation.  Blocks of *empty* experts are never visited and
-    must be zeroed by the caller.
+    fp32 accumulation.  Blocks of *empty* experts are zero-initialized
+    in-kernel (each empty expert gets a dedicated ``efirst`` filler item) —
+    callers no longer need to mask the output.
     """
     S, d = lhs.shape
     h = dout.shape[1]

@@ -259,9 +259,25 @@ def _moe_ep_a2a(xf: jax.Array, p: dict, cfg, n_model: int, rb):
     # Out-of-capacity slots get an out-of-range index -> scatter-dropped.
     buf_idx = jnp.where(valid, dest_rank * C + pos_in_rank, n * C)
     flat_idx = buf_idx.reshape(-1)
-    tok_rows = jnp.repeat(jnp.arange(Lc, dtype=jnp.int32), k)
-    send_x = jnp.zeros((n * C, d), xc.dtype).at[flat_idx].set(
-        jnp.take(xc, tok_rows, axis=0), mode="drop")
+    # Send-buffer rows are built as a *gather from the dispatch metadata*
+    # (buffer slot ``r*C + p`` <-> dispatch slot ``offsets[r] + p``), not a
+    # scatter of a materialized (Lc·k, d) routed copy.  Under a Pallas
+    # backend the rows stream through the ``gather_rows`` kernel (send
+    # buffer filled inside the kernel from ``expert_token_indices``); the
+    # jnp path is the same gather expressed as a masked take.
+    slot_rank = jnp.repeat(jnp.arange(n, dtype=jnp.int32), C)
+    slot_pos = jnp.tile(jnp.arange(C, dtype=jnp.int32), n)
+    slot_ok = slot_pos < jnp.minimum(dr.expert_lengths, C)[slot_rank]
+    src_slot = jnp.minimum(dr.expert_token_offsets[slot_rank] + slot_pos,
+                           Lc * k - 1)
+    row_ids = jnp.where(slot_ok, dr.expert_token_indices[src_slot], -1)
+    if rb.name in ("pallas", "pallas_fused"):
+        from repro.kernels.ops import gather_rows
+        send_x = gather_rows(xc, row_ids)
+    else:
+        send_x = jnp.where(slot_ok[:, None],
+                           jnp.take(xc, jnp.maximum(row_ids, 0), axis=0),
+                           jnp.zeros((), xc.dtype))
     send_g = jnp.zeros((n * C,), gates.dtype).at[flat_idx].set(
         gates.reshape(-1), mode="drop")
     e_local = (g.topk_experts % E_loc).reshape(-1).astype(jnp.int32)

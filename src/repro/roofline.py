@@ -10,6 +10,11 @@ Three terms per (arch x shape x mesh), in seconds:
 and bytes are already per-chip.  Collective bytes are not in cost_analysis —
 we parse the compiled HLO and sum operand sizes of every all-gather /
 all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+The same intensity model also drives kernel tiling:
+:func:`select_moe_tiles` picks the ``bl``/``bh`` work-item tile sizes for
+the gather-GMM / fused-MoE kernels from the ridge point instead of
+hard-coded 128s.
 """
 
 from __future__ import annotations
@@ -132,6 +137,75 @@ def analyze_compiled(compiled, cfg, shape, *, n_chips: int) -> dict:
         "useful_flops_ratio": mf / max(flops * n_chips, 1.0),
         "n_chips": n_chips,
     }
+
+
+def select_moe_tiles(n_rows: int, d: int, h: int, *, dtype_bytes: int = 2,
+                     num_experts: int | None = None,
+                     vmem_limit_bytes: int = 8 * 1024 * 1024
+                     ) -> tuple[int, int]:
+    """Arithmetic-intensity-driven ``(bl, bh)`` tile selection for the
+    gather-GMM / fused-MoE work-item kernels.
+
+    A work-item step multiplies a ``(bl, d)`` row tile against ``(d, bh)``
+    weight blocks (plus the ``(bh, d)`` down-projection in the fused path).
+    Its arithmetic intensity is
+
+        AI(bl, bh) = 2·bl·bh·d / ((bl·d + 2·d·bh + bh·d)·dtype_bytes)
+
+    and the kernel stops being HBM-bound once AI exceeds the hardware ridge
+    point ``PEAK_FLOPS_BF16 / HBM_BW`` (~240 flops/byte for the modeled
+    chip).  We scan MXU-aligned candidates (multiples of 128, largest first
+    per axis so ties break toward squarer tiles), keep those whose per-step
+    VMEM footprint — gathered rows + three weight blocks + the fp32 partial
+    accumulator and elementwise temps — fits ``vmem_limit_bytes``, and pick
+    the *smallest* tile pair that reaches the ridge (beyond it, bigger tiles
+    only add VMEM pressure and tail waste).  If nothing reaches the ridge
+    (small ``d``), pick the max-AI candidate that fits.  The kernels still
+    clamp: ``bh`` to the largest divisor of ``h``, ``bl`` to the padded row
+    count — the returned pair is a *request*, exactly like the literals it
+    replaces.
+
+    When ``num_experts`` is given and the active JAX backend is CPU (the
+    interpret-mode CI), ``bl`` is additionally shrunk for expert-boundary
+    fragmentation — see the inline comment.
+    """
+    ridge = PEAK_FLOPS_BF16 / HBM_BW
+    cands = []
+    for bl in (128, 256, 512):
+        for bh in (128, 256, 512):
+            vmem = ((bl * d + 2 * d * bh + bh * d) * dtype_bytes
+                    + bl * d * 4          # fp32 partial accumulator
+                    + 3 * bl * bh * 4)    # a / b / y_swi fp32 temps
+            if vmem > vmem_limit_bytes:
+                continue
+            ai = (2.0 * bl * bh * d
+                  / ((bl * d + 2 * d * bh + bh * d) * dtype_bytes))
+            cands.append((ai, bl, bh, bl * bh))
+    if not cands:
+        return 128, min(128, max(8, h))
+    reaching = [c for c in cands if c[0] >= ridge]
+    if reaching:
+        _, bl, bh, _ = min(reaching, key=lambda c: (c[3], c[1]))
+    else:
+        _, bl, bh, _ = max(cands, key=lambda c: (c[0], -c[3]))
+    # No point tiling beyond the problem: shrink toward the actual extents
+    # (the kernel would clamp anyway; doing it here keeps the request honest).
+    while bl > 128 and bl // 2 >= n_rows:
+        bl //= 2
+    while bh > 128 and bh // 2 >= h:
+        bh //= 2
+    # Expert-boundary fragmentation: the work-item scheme runs one full
+    # (bl, ·) tile per expert boundary even when that item covers a handful
+    # of slots, so total GEMM work scales like ``n_rows + E·bl``.  On TPU
+    # the memory side (weight restreaming ∝ n_tiles + E) rewards big tiles
+    # regardless, but under the CPU interpreter wall time tracks flops —
+    # shrink ``bl`` until the masked-tile waste stops dominating the real
+    # rows.  TPU tile selection is unchanged.
+    import jax                     # deferred: roofline stays importable fast
+    if num_experts and jax.default_backend() == "cpu":
+        while bl > 32 and num_experts * bl >= 2 * n_rows:
+            bl //= 2
+    return bl, bh
 
 
 def bench_entries(analysis: dict, prefix: str) -> list:

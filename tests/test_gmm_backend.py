@@ -1,7 +1,8 @@
 """Backend-parity suite for the pluggable grouped-GEMM registry
 (repro.core.gmm_backend): forward + VJP agreement between ``segment``,
-``ragged`` (when the JAX install has it), and ``pallas``, across activations
-and empty-expert group shapes; plus selection semantics."""
+``ragged`` (when the JAX install has it), ``pallas`` and ``pallas_fused``,
+across activations and empty-expert group shapes; plus selection semantics.
+(The fused layer path gets its dedicated matrix in test_fused_path.py.)"""
 
 import jax
 import jax.numpy as jnp
@@ -218,6 +219,40 @@ def test_gmm_trailing_rows_are_exact_zeros(backend, S, sizes):
     np.testing.assert_array_equal(y[total:], np.zeros((S - total, h)))
 
 
+@pytest.mark.parametrize("backend", _param(ALL_BACKENDS))
+def test_gmm_non_divisible_h_parity(backend):
+    """Regression: ``gather_gmm`` used to crash at trace time on FFN widths
+    that weren't multiples of the 128 tile request (``assert h % bh == 0``);
+    ``bh`` now clamps to the largest divisor.  h=192 tiles as bh=96."""
+    S, d, h, E = 48, 16, 192, 4
+    lhs, rhs, dout, gs = _grouped(9, S, d, h, E)
+    y = GB.gmm(lhs, rhs, gs, backend=backend)
+    yr = GB.gmm(lhs, rhs, gs, backend="segment")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-5)
+    dw = GB.gmm_dw(lhs, dout, gs, backend=backend)
+    dwr = GB.gmm_dw(lhs, dout, gs, backend="segment")
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dwr),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", _param(ALL_BACKENDS))
+def test_gmm_dw_empty_experts_cross_backend(backend):
+    """Empty-expert contract regression: every backend must return *exact
+    zeros* (not NaN, not masked-by-the-caller garbage) for the dw blocks of
+    experts with no rows.  The pallas kernel used to leave those blocks
+    uninitialized and rely on caller-side masking."""
+    S, d, h = 64, 16, 24
+    lhs, _, dout, _ = _grouped(11, S, d, h, 4)
+    gs = jnp.asarray([30, 0, 34, 0], jnp.int32)
+    dw = np.asarray(GB.gmm_dw(lhs, dout, gs, backend=backend))
+    assert np.isfinite(dw).all()
+    np.testing.assert_array_equal(dw[1], 0.0)
+    np.testing.assert_array_equal(dw[3], 0.0)
+    ref = np.asarray(lhs)[:30].T @ np.asarray(dout)[:30]
+    np.testing.assert_allclose(dw[0], ref, rtol=1e-4, atol=1e-5)
+
+
 # Selection semantics
 # ---------------------------------------------------------------------------
 
@@ -225,7 +260,8 @@ def test_gmm_trailing_rows_are_exact_zeros(backend, S, sizes):
 def test_auto_default_resolves_to_available():
     name = GB.resolve_backend_name(None)
     assert name in AVAILABLE
-    assert name != "pallas"                    # never auto-selected
+    # interpret-mode kernel targets are never auto-selected
+    assert name not in ("pallas", "pallas_fused")
 
 
 def test_env_var_selection(monkeypatch):
