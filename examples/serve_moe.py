@@ -22,7 +22,7 @@ def main():
                                           seq_len=128, learning_rate=2e-3,
                                           log_every=20))
 
-    print("\n== batched serving (4 slots, rolling SWA caches) ==")
+    print("\n== batched serving (4 slots, paged KV cache) ==")
     eng = ServeEngine(cfg, params, batch_slots=4, capacity=256)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(3, cfg.vocab_size, size=n,
@@ -32,6 +32,7 @@ def main():
     for i, r in enumerate(eng.generate(reqs)):
         print(f"request[{i}] prompt={r.prompt.tolist()} -> "
               f"generated={r.out_tokens}")
+    print(f"\nscheduler stats: {eng.stats}")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,9 @@ def _run_suite(suite: str, small: bool) -> dict:
     elif suite == "memory":
         from repro.bench.memory import memory_suite
         entries = memory_suite(small=small)
+    elif suite == "serving":
+        from repro.bench.serving import serving_suite
+        entries = serving_suite(small=small)
     else:
         raise ValueError(suite)
     return R.make_record(suite, entries, config={"small": small})
@@ -41,7 +44,7 @@ def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.bench",
                                  description=__doc__.split("\n\n")[0])
     ap.add_argument("--suite", default="all",
-                    choices=["all", "kernels", "memory"])
+                    choices=["all", "kernels", "memory", "serving"])
     ap.add_argument("--small", action="store_true",
                     help="reduced sweep (CI / tests)")
     ap.add_argument("--check", action="store_true",
@@ -65,7 +68,8 @@ def main(argv: list[str] | None = None) -> int:
             ap.error("--record only makes sense with --check")
         records = [R.load_record(args.record)]
     else:
-        suites = ["kernels", "memory"] if args.suite == "all" else [args.suite]
+        suites = (["kernels", "memory", "serving"] if args.suite == "all"
+                  else [args.suite])
         records = []
         for suite in suites:
             print(f"# running {suite} suite (small={args.small}) ...",
@@ -132,5 +136,22 @@ def main(argv: list[str] | None = None) -> int:
         if not fails:
             print("OK: fused path saves no slot buffers and is not slower "
                   "than the unfused pallas path")
+        ok = ok and not fails
+
+    # Serving same-run gates: batched-vs-solo token parity (the left-pad
+    # bugfix), decode slot-steps == sum(T_r - 1) (continuous slot release),
+    # and the int8 paged pool's measured bytes-per-token advantage over
+    # dense bf16 slots — all pairings within THIS run's record.
+    from repro.bench.serving import serving_gate_failures
+    for rec in records:
+        if rec["suite"] != "serving":
+            continue
+        fails = serving_gate_failures(rec["entries"])
+        print("== serving same-run gates ==")
+        for line in fails:
+            print(line)
+        if not fails:
+            print("OK: batched==solo tokens, slots released on finish, "
+                  "int8 paged KV >= 1.8x smaller than dense bf16 slots")
         ok = ok and not fails
     return 0 if ok else 1

@@ -35,6 +35,7 @@ DEFAULT_TOLERANCE_PCT = 20.0
 BENCH_FILES = {
     "kernels": "BENCH_kernels.json",
     "memory": "BENCH_memory.json",
+    "serving": "BENCH_serving.json",
 }
 
 

@@ -1,0 +1,189 @@
+"""Serving-engine benchmark suite — the paged-KV decode story as tracked,
+gated numbers.
+
+Three entry families on the bench MoE config:
+
+* ``serving/parity/*`` — the left-pad regression, run as a measurement:
+  a mixed-prompt-length batch through the continuous scheduler vs each
+  request solo, token-mismatch count (MUST be zero — batched output may not
+  depend on batch-mates).
+* ``serving/sched/*`` — continuous-batching accounting: decode slot-steps
+  must equal ``sum(T_r - 1)`` exactly (finished requests burn no decode
+  FLOPs, one prefill logit per request), plus blocked-admission and
+  page-pool stats under a page budget.
+* ``serving/kv/*`` — MEASURED cache bytes (``kv_quant.cache_bytes`` over
+  the actual pytrees): the int8 paged pool vs the seed's dense bf16 slot
+  cache, per cached token.  The same-run gate requires >= 1.8x fewer bytes
+  per token, and throughput (tokens/s) rides along informationally.
+
+The deterministic entries (byte counts, scheduler counts, parity) are
+baseline-gated at 0% tolerance; wall-clock entries are informational (CI
+runners are noisy).  ``serving_gate_failures`` adds the baseline-independent
+same-run pairings, like ``timing.fused_gate_failures`` and
+``memory.sim_parity_failures``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.bench.memory import bench_config
+from repro.bench.record import entry
+from repro.core import memsim
+from repro.models import transformer as T
+from repro.serve import kv_quant as KQ
+from repro.serve.engine import Request, ServeEngine
+
+#: required measured-bytes advantage of the int8 paged pool over bf16 dense
+#: slots, per cached token (the acceptance bar's number).
+INT8_KV_RATIO_MIN = 1.8
+
+_SLOTS = 2
+_CAPACITY = 64
+_PAGE_SIZE = 8
+
+
+def _prompts(cfg, n: int, *, seed: int = 0) -> list[np.ndarray]:
+    """Mixed-length prompts (the shape that exposed the left-pad bug)."""
+    rng = np.random.default_rng(seed)
+    lens = [1 + (3 * i) % 8 for i in range(n)]
+    return [rng.integers(1, cfg.vocab_size, size=L).astype(np.int32)
+            for L in lens]
+
+
+def _requests(prompts, cfg, max_new: int) -> list[Request]:
+    # eos_id outside the vocab: every request runs to max_new_tokens, so the
+    # scheduler counts below are exact and version-independent.
+    return [Request(prompt=p, max_new_tokens=max_new, eos_id=cfg.vocab_size)
+            for p in prompts]
+
+
+def _engine(cfg, params, **kw) -> ServeEngine:
+    return ServeEngine(cfg, params, batch_slots=_SLOTS, capacity=_CAPACITY,
+                       page_size=_PAGE_SIZE, **kw)
+
+
+def serving_suite(*, small: bool = False) -> list:
+    cfg = bench_config()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    n_req = 4 if small else 8
+    max_new = 5 if small else 9
+    prompts = _prompts(cfg, n_req)
+
+    # -- batched-vs-solo parity (the left-pad bug, measured) ----------------
+    batched = _engine(cfg, params)
+    b_reqs = _requests(prompts, cfg, max_new)
+    t0 = time.perf_counter()
+    batched.generate(b_reqs)
+    batched_s = time.perf_counter() - t0
+    mismatches = 0
+    for p, r in zip(prompts, b_reqs):
+        solo = _engine(cfg, params)
+        s_req = solo.generate(_requests([p], cfg, max_new))[0]
+        mismatches += sum(a != b for a, b in
+                          zip(r.out_tokens, s_req.out_tokens))
+        mismatches += abs(len(r.out_tokens) - len(s_req.out_tokens))
+
+    # -- continuous-scheduler accounting ------------------------------------
+    st = batched.stats
+    expected_slot_tokens = sum(len(r.out_tokens) - 1 for r in b_reqs)
+    gen_tokens = sum(len(r.out_tokens) for r in b_reqs)
+
+    # -- measured KV bytes: int8 paged pool vs dense bf16 slots -------------
+    num_pages = batched.num_pages
+    paged_int8 = T.init_paged_cache(cfg, num_pages, _PAGE_SIZE,
+                                    quantized=True)
+    dense_bf16 = T.init_cache(cfg.replace(dtype="bfloat16"), _SLOTS,
+                              _CAPACITY)
+    int8_per_tok = KQ.cache_bytes(paged_int8) / (num_pages * _PAGE_SIZE)
+    bf16_per_tok = KQ.cache_bytes(dense_bf16) / (_SLOTS * _CAPACITY)
+
+    # -- int8 engine: same requests, tokens/s + stats ------------------------
+    int8_eng = _engine(cfg, params, kv_dtype="int8")
+    i_reqs = _requests(prompts, cfg, max_new)
+    t0 = time.perf_counter()
+    int8_eng.generate(i_reqs)
+    int8_s = time.perf_counter() - t0
+    int8_gen = sum(len(r.out_tokens) for r in i_reqs)
+
+    sim = memsim.simulate_serve(
+        cfg, batch_slots=_SLOTS, num_pages=num_pages, page_size=_PAGE_SIZE,
+        prefill_tokens=max(p.size for p in prompts), quantized=False)
+
+    det = dict(kind="serving", tolerance_pct=0.0)
+    info = dict(kind="serving", tolerance_pct=None)
+    return [
+        entry("serving/parity/mismatched_tokens", mismatches, unit="tokens",
+              n_requests=n_req, max_new=max_new, **det),
+        entry("serving/sched/decode_slot_tokens", st["decode_slot_tokens"],
+              unit="tokens", **det),
+        entry("serving/sched/expected_slot_tokens", expected_slot_tokens,
+              unit="tokens", **det),
+        entry("serving/sched/decode_steps", st["decode_steps"],
+              unit="steps", **det),
+        entry("serving/sched/blocked_admissions", st["blocked_admissions"],
+              unit="events", **info),
+        entry("serving/sched/peak_pages_used", st["peak_pages_used"],
+              unit="pages", num_pages=num_pages, **det),
+        entry("serving/kv/int8_paged_bytes_per_token", int8_per_tok,
+              unit="bytes", num_pages=num_pages, page_size=_PAGE_SIZE,
+              **det),
+        entry("serving/kv/bf16_dense_bytes_per_token", bf16_per_tok,
+              unit="bytes", slots=_SLOTS, capacity=_CAPACITY, **det),
+        entry("serving/kv/sim_serve_peak_bytes", sim.peak_bytes,
+              unit="bytes", peak_phase=sim.peak_phase, **det),
+        entry("serving/throughput/tokens_per_s",
+              gen_tokens / max(batched_s, 1e-9), unit="tokens/s",
+              generated=gen_tokens, **info),
+        entry("serving/throughput/int8_tokens_per_s",
+              int8_gen / max(int8_s, 1e-9), unit="tokens/s",
+              generated=int8_gen, **info),
+    ]
+
+
+def serving_gate_failures(entries: list) -> list:
+    """Baseline-independent same-run gates for the serving leg:
+
+    1. batched-vs-solo token parity must be EXACT (the left-pad bugfix);
+    2. decode slot-steps must equal ``sum(T_r - 1)`` — finished requests may
+       not burn decode FLOPs;
+    3. the measured int8 paged pool must be >= ``INT8_KV_RATIO_MIN``x
+       smaller per cached token than the seed's dense bf16 slot cache.
+
+    Returns human-readable failure lines (empty == all gates hold)."""
+    by_name = {e["name"]: e for e in entries}
+    need = ("serving/parity/mismatched_tokens",
+            "serving/sched/decode_slot_tokens",
+            "serving/sched/expected_slot_tokens",
+            "serving/kv/int8_paged_bytes_per_token",
+            "serving/kv/bf16_dense_bytes_per_token")
+    if not any(n in by_name for n in need):
+        # No serving family at all (synthetic/legacy record): nothing to
+        # pair.  Fresh runs always emit the family via ``serving_suite``.
+        return []
+    if not all(n in by_name for n in need):
+        return ["SERVING serving/* family incomplete in this run "
+                "(regenerate the record with the current suite)"]
+    fails = []
+    par = by_name["serving/parity/mismatched_tokens"]["value"]
+    if par != 0:
+        fails.append(f"SERVING parity: {int(par)} token(s) differ between "
+                     "batched and solo runs; batched output must not depend "
+                     "on batch-mates")
+    got = by_name["serving/sched/decode_slot_tokens"]["value"]
+    want = by_name["serving/sched/expected_slot_tokens"]["value"]
+    if got != want:
+        fails.append(f"SERVING scheduler: {int(got)} decode slot-tokens vs "
+                     f"sum(T_r - 1) = {int(want)}; finished requests must "
+                     "release their slots")
+    int8 = by_name["serving/kv/int8_paged_bytes_per_token"]["value"]
+    bf16 = by_name["serving/kv/bf16_dense_bytes_per_token"]["value"]
+    ratio = bf16 / max(int8, 1e-9)
+    if ratio < INT8_KV_RATIO_MIN:
+        fails.append(f"SERVING kv bytes: int8 paged pool is only {ratio:.2f}x"
+                     f" smaller per token than dense bf16 slots "
+                     f"(need >= {INT8_KV_RATIO_MIN}x)")
+    return fails

@@ -364,6 +364,96 @@ def simulate(cfg, n_tokens: int, *, batch: int = 1, plan=None,
                        recompute_bytes=sum(recs))
 
 
+# ---------------------------------------------------------------------------
+# serve mode: paged KV cache + inference activations
+# ---------------------------------------------------------------------------
+
+
+def _kv_kinds(cfg) -> list:
+    """Layer kinds that carry a KV cache."""
+    return [k for k in _layer_kinds(cfg) if "attn" in k or k == "hymba"]
+
+
+def kv_bytes_per_token(cfg, *, quantized: bool = False,
+                       dtype: str | None = None) -> int:
+    """KV-cache bytes ONE cached token costs across all layers.  ``dtype``
+    overrides the storage dtype for the unquantized case (e.g. compare a
+    bf16 dense baseline against an int8 paged pool on an f32 config);
+    ``quantized`` prices the int8 + f16-scale layout of
+    ``serve/paged_cache`` / ``serve/kv_quant``."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if quantized:
+        per_layer = 2 * kv * hd + 2 * kv * 2          # int8 k/v + f16 scales
+    else:
+        per_layer = 2 * kv * hd * _itemsize(dtype or cfg.dtype)
+    return per_layer * len(_kv_kinds(cfg))
+
+
+def kv_page_bytes(cfg, num_pages: int, page_size: int, *,
+                  quantized: bool = False) -> int:
+    """Total bytes of the block-paged KV pools (``T.init_paged_cache``):
+    every page of every layer, allocated up front — the serve-mode
+    equivalent of the training residual base."""
+    return num_pages * page_size * kv_bytes_per_token(cfg,
+                                                      quantized=quantized)
+
+
+def dense_slot_bytes(cfg, batch_slots: int, capacity: int, *,
+                     dtype: str | None = None) -> int:
+    """The seed engine's dense per-slot cache (``T.init_cache``): every slot
+    pins ``capacity`` positions whether or not a request ever reaches them —
+    the baseline the paged pool is gated against."""
+    return batch_slots * capacity * kv_bytes_per_token(cfg, dtype=dtype)
+
+
+def simulate_serve(cfg, *, batch_slots: int, num_pages: int, page_size: int,
+                   prefill_tokens: int, prefill_batch: int = 1,
+                   quantized: bool = False, n_model: int = 1) -> MemTimeline:
+    """Simulate the serving engine's per-device memory timeline.
+
+    Two phases — ``prefill`` (whole-prompt forward at ``prefill_tokens``
+    total tokens over ``prefill_batch`` sequences) and ``decode`` (one
+    single-token step over the full slot array).  The paged KV pool is the
+    *held* set of both phases (allocated once, resident for the engine's
+    life); transients are the largest single layer's forward working set —
+    inference holds no residuals, so layers reuse their buffers — plus, for
+    decode, the per-request page-gather views ``(B, pages_per_seq *
+    page_size, Hkv, Dh)`` that ``paged_attention`` materializes.  Same
+    jax-free shape arithmetic as :func:`simulate`.
+    """
+    it = _itemsize(cfg.dtype)
+    pool_b = kv_page_bytes(cfg, num_pages, page_size, quantized=quantized)
+    mode = "single" if n_model <= 1 else "ep"
+    kinds = set(_layer_kinds(cfg))
+
+    def layer_transient(n_tokens: int, batch: int) -> int:
+        x_b = n_tokens * cfg.d_model * it
+        return max(_kind_sizes(cfg, k, n_tokens, batch, mode, n_model).core
+                   + 2 * x_b for k in kinds)
+
+    logits_b = batch_slots * cfg.vocab_size * 4
+    # page-table width: the engine's default budget is full occupancy
+    # (num_pages = 1 + slots * pages_per_seq), so invert that here
+    pages_per_seq = -(-(num_pages - 1) // max(batch_slots, 1))
+    gather_tokens = batch_slots * pages_per_seq * page_size
+    gather_b = 2 * gather_tokens * cfg.num_kv_heads * cfg.resolved_head_dim \
+        * (1 if quantized else it)
+    if quantized:
+        gather_b += 2 * gather_tokens * cfg.num_kv_heads * 2   # f16 scales
+    phases = (
+        Phase(name="prefill", held_bytes=pool_b,
+              transient_bytes=layer_transient(prefill_tokens, prefill_batch)
+              + prefill_batch * cfg.vocab_size * 4),
+        Phase(name="decode", held_bytes=pool_b,
+              transient_bytes=layer_transient(batch_slots, batch_slots)
+              + gather_b + logits_b),
+    )
+    return MemTimeline(phases=phases,
+                       base_bytes=param_bytes(cfg, n_model=n_model),
+                       base="acts", mode=mode, n_model=n_model,
+                       recompute_bytes=0)
+
+
 def simulate_peak(cfg, n_tokens: int, *, batch: int = 1, plan=None,
                   mode: str | None = None, n_model: int = 1,
                   base: str = "grad") -> int:

@@ -25,6 +25,9 @@ def main(argv=None):
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=512)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-dtype", default=None, choices=["int8", "model"],
+                    help="int8: quantized paged KV pool (~2x fewer bytes)")
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args(argv)
 
@@ -39,13 +42,15 @@ def main(argv=None):
         _, params = restore_checkpoint(args.ckpt, params)
 
     eng = ServeEngine(cfg, params, batch_slots=args.prompts,
-                      capacity=args.capacity)
+                      capacity=args.capacity, page_size=args.page_size,
+                      kv_dtype=args.kv_dtype)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(
         3, cfg.vocab_size, size=int(rng.integers(2, 9))).astype(np.int32),
         max_new_tokens=args.max_new) for _ in range(args.prompts)]
     for i, r in enumerate(eng.generate(reqs)):
         print(f"req[{i}]: prompt={r.prompt.tolist()} -> {r.out_tokens}")
+    print(f"stats: {eng.stats}")
 
 
 if __name__ == "__main__":

@@ -96,22 +96,26 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      window: int = 0, cap: float = 0.0) -> jax.Array:
     """One-token attention against a (possibly rolling) cache.
 
-    q: (B, 1, Hq, Dh); caches: (B, C, Hkv, Dh); slot_pos: (C,) the absolute
-    position stored in each cache slot (-1 = empty).
+    q: (B, 1, Hq, Dh); caches: (B, C, Hkv, Dh); slot_pos: (B, C) the absolute
+    position stored in each request's cache slot (-1 = empty).  ``pos`` is
+    scalar (every request at the same position — teacher forcing) or (B,)
+    per-request current positions (serving: requests decode at their own
+    prefix lengths).
     """
     B, _, Hq, Dh = q.shape
     _, C, Hkv, _ = k_cache.shape
     G = Hq // Hkv
+    pos = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (B,))
     # Keep the cache in its storage dtype — accumulate in f32 inside the dot
     # (a multi-GiB f32 copy of the cache would otherwise materialize).
     qf = (q.reshape(B, Hkv, G, Dh) * Dh ** -0.5).astype(k_cache.dtype)
     s = jnp.einsum("bhgd,bchd->bhgc", qf, k_cache,
                    preferred_element_type=jnp.float32)
     s = softcap(s, cap)
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])         # (B, C)
     if window:
-        valid &= slot_pos > pos - window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid &= slot_pos > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgc,bchd->bhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -121,7 +125,9 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 class KVCache(NamedTuple):
     k: jax.Array          # (B, C, Hkv, Dh)
     v: jax.Array          # (B, C, Hkv, Dh)
-    slot_pos: jax.Array   # (C,) int32, absolute position per slot (-1 empty)
+    slot_pos: jax.Array   # (B, C) int32, absolute position per slot (-1
+    # empty) — per-request, so batched requests can sit at different
+    # positions (the serving engine's mixed-prompt-length requirement)
 
 
 def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
@@ -129,7 +135,7 @@ def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
     return KVCache(
         k=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
         v=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
-        slot_pos=jnp.full((capacity,), -1, jnp.int32),
+        slot_pos=jnp.full((batch, capacity), -1, jnp.int32),
     )
 
 
@@ -149,28 +155,44 @@ def init_attn_params(key, cfg, d: int) -> dict:
     return p
 
 
-def attention_sublayer(x: jax.Array, p: dict, cfg, *, is_local: bool,
-                       positions: jax.Array, cache: KVCache | None = None,
-                       num_heads: int | None = None):
-    """(B, S, d) -> (B, S, d).  With ``cache`` (decode), S must be 1 and
-    ``positions`` is the scalar write position; returns (out, new_cache)."""
+def _project_qkv(x: jax.Array, p: dict, cfg, positions: jax.Array,
+                 num_heads: int | None = None):
+    """Shared q/k/v projection + qk-norm + RoPE.  ``positions`` may be a
+    scalar, an (S,) shared sequence, an (B,) per-request decode position
+    (S == 1), or a full (B, S) grid."""
     B, S, _ = x.shape
     H = num_heads if num_heads is not None else cfg.num_heads
     Hkv = cfg.num_kv_heads
     dh = cfg.resolved_head_dim
-    window = cfg.sliding_window if is_local else 0
     dt = x.dtype
-
     q = tag((x @ p["wq"].astype(dt)).reshape(B, S, H, dh), QKV)
     k = (x @ p["wk"].astype(dt)).reshape(B, S, Hkv, dh)
     v = (x @ p["wv"].astype(dt)).reshape(B, S, Hkv, dh)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
-    pos_b = jnp.broadcast_to(positions, (B, S)) if positions.ndim <= 1 \
-        else positions
+    if positions.ndim == 2:
+        pos_b = positions
+    elif positions.ndim == 1 and S == 1 and positions.shape[0] == B:
+        pos_b = positions[:, None]       # per-request decode positions
+    else:
+        pos_b = jnp.broadcast_to(positions, (B, S))
     q = rope(q, pos_b, cfg.rope_theta)
     k = rope(k, pos_b, cfg.rope_theta)
+    return q, k, v, pos_b
+
+
+def attention_sublayer(x: jax.Array, p: dict, cfg, *, is_local: bool,
+                       positions: jax.Array, cache: KVCache | None = None,
+                       num_heads: int | None = None):
+    """(B, S, d) -> (B, S, d).  With ``cache`` (decode), S must be 1 and
+    ``positions`` is the write position — scalar or per-request (B,);
+    returns (out, new_cache)."""
+    B, S, _ = x.shape
+    H = num_heads if num_heads is not None else cfg.num_heads
+    dh = cfg.resolved_head_dim
+    window = cfg.sliding_window if is_local else 0
+    q, k, v, pos_b = _project_qkv(x, p, cfg, positions, num_heads)
 
     if cache is None:
         if cfg.use_pallas:
@@ -184,15 +206,54 @@ def attention_sublayer(x: jax.Array, p: dict, cfg, *, is_local: bool,
                 block_skip=cfg.block_causal_skip)
         new_cache = None
     else:
-        pos = positions.reshape(())
+        pos = jnp.broadcast_to(pos_b[:, 0], (B,))     # per-request positions
         C = cache.k.shape[1]
         slot = (pos % C).astype(jnp.int32)
-        kc = cache.k.at[:, slot].set(k[:, 0])
-        vc = cache.v.at[:, slot].set(v[:, 0])
-        sp = cache.slot_pos.at[slot].set(pos.astype(jnp.int32))
+        bidx = jnp.arange(B)
+        kc = cache.k.at[bidx, slot].set(k[:, 0])
+        vc = cache.v.at[bidx, slot].set(v[:, 0])
+        sp = cache.slot_pos.at[bidx, slot].set(pos.astype(jnp.int32))
         o = decode_attention(q, kc, vc, sp, pos, window=window,
                              cap=cfg.attn_softcap)
         new_cache = KVCache(kc, vc, sp)
 
-    o = tag(o.reshape(B, S, H * dh) @ p["wo"].astype(dt), ATTN_OUT)
+    o = tag(o.reshape(B, S, H * dh) @ p["wo"].astype(x.dtype), ATTN_OUT)
     return o, new_cache
+
+
+def paged_attention_sublayer(x: jax.Array, p: dict, cfg, *, is_local: bool,
+                             positions: jax.Array, pages, page_table,
+                             prefill: bool):
+    """Attention sublayer against a block-paged cache (serving).
+
+    ``prefill=True``: ``x`` is the whole right-padded prompt ``(B, S, d)``
+    with shared ``positions = arange(S)``; every position's k/v is scattered
+    through ``page_table`` (padded tails land on the trash page) and
+    attention runs causally on the in-flight k/v — one jitted call fills the
+    cache, no token-at-a-time teacher forcing.  ``prefill=False``: S == 1
+    and ``positions`` are per-request ``(B,)`` write positions; the new k/v
+    is appended and attention gathers the request's pages.  Returns
+    ``(out, new_pages)``."""
+    from repro.serve import paged_cache as PC
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dh = cfg.resolved_head_dim
+    window = cfg.sliding_window if is_local else 0
+    q, k, v, _ = _project_qkv(x, p, cfg, positions)
+
+    if prefill:
+        new_pages = PC.write_prefill(pages, k, v, page_table)
+        if cfg.use_pallas:
+            from repro.kernels.flash_attention import flash_attention_fused
+            o = flash_attention_fused(q, k, v, True, window, cfg.attn_softcap)
+        else:
+            o = flash_attention(q, k, v, causal=True, window=window,
+                                cap=cfg.attn_softcap,
+                                chunk=min(cfg.attn_chunk, S),
+                                block_skip=cfg.block_causal_skip)
+    else:
+        new_pages = PC.write_decode(pages, k, v, page_table, positions)
+        o = PC.paged_attention(q, new_pages, page_table, positions,
+                               window=window, cap=cfg.attn_softcap)
+    o = tag(o.reshape(B, S, H * dh) @ p["wo"].astype(x.dtype), ATTN_OUT)
+    return o, new_pages

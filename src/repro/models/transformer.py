@@ -12,10 +12,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from typing import NamedTuple
+
 from repro.core import checkpoint as CK
 from repro.models import ssm
 from repro.models.attention import (attention_sublayer, init_attn_params,
-                                    init_kv_cache)
+                                    init_kv_cache, paged_attention_sublayer)
 from repro.models.common import dense_init, rms_norm, softcap
 from repro.models.ffn import ffn_sublayer, init_ffn_params
 from repro.models.moe_block import init_moe_params, moe_sublayer
@@ -88,17 +90,27 @@ def init_params(key, cfg) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _apply_sublayer(x, p, kind: str, cfg, *, mesh, positions, cache):
+def _apply_sublayer(x, p, kind: str, cfg, *, mesh, positions, cache,
+                    paged=None):
     """Returns (x, aux, stats, new_cache) — ``aux`` the scalar aux loss,
-    ``stats`` the scalar ``ep_a2a`` routing-overflow fraction."""
+    ``stats`` the scalar ``ep_a2a`` routing-overflow fraction.  ``paged``
+    (a :class:`PagedCtx`) switches the attention sublayers onto the
+    block-paged cache path; ``cache`` then holds each sublayer's
+    :class:`~repro.serve.paged_cache.PagedKV` pool."""
     aux = jnp.zeros((), jnp.float32)
     stats = jnp.zeros((), jnp.float32)
     if kind in ATTN_KINDS:
         is_local = "local" in kind and cfg.sliding_window > 0
         h = rms_norm(x, p["ln1"])
-        h, new_kv = attention_sublayer(
-            h, p["attn"], cfg, is_local=is_local, positions=positions,
-            cache=cache[0] if cache is not None else None)
+        if paged is not None:
+            h, new_kv = paged_attention_sublayer(
+                h, p["attn"], cfg, is_local=is_local, positions=positions,
+                pages=cache[0], page_table=paged.page_table,
+                prefill=paged.prefill)
+        else:
+            h, new_kv = attention_sublayer(
+                h, p["attn"], cfg, is_local=is_local, positions=positions,
+                cache=cache[0] if cache is not None else None)
         if cfg.post_norms:
             h = rms_norm(h, p["ln1_post"])
         x = x + h
@@ -137,7 +149,7 @@ def _apply_sublayer(x, p, kind: str, cfg, *, mesh, positions, cache):
 
 
 def _apply_group(x, gp, cfg, *, mesh, positions, cache_group,
-                 sub_policies=None):
+                 sub_policies=None, paged=None):
     """Apply one pattern group.  ``sub_policies`` (kind -> jax.checkpoint
     policy) engages per-block-kind remat: the plan scopes some shared tag
     differently across the kinds of this pattern, so each sublayer is
@@ -157,7 +169,8 @@ def _apply_group(x, gp, cfg, *, mesh, positions, cache_group,
             x, aux, st, nc = sub(x, gp[j])
         else:
             x, aux, st, nc = _apply_sublayer(x, gp[j], kind, cfg, mesh=mesh,
-                                             positions=positions, cache=c)
+                                             positions=positions, cache=c,
+                                             paged=paged)
         auxes.append(aux)
         stats.append(st)
         new_caches.append(nc)
@@ -303,6 +316,129 @@ def decode_step(params, cache, batch, pos, cfg, *, mesh=None):
         gp, cache_group = scan_in
         x, _, _, nc = _apply_group(x, gp, cfg, mesh=mesh, positions=positions,
                                    cache_group=cache_group)
+        return x, nc
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(group_fn, x, (params["layers"], cache))
+    else:
+        ncs = []
+        for i in range(cfg.num_groups):
+            gp = jax.tree.map(lambda l: l[i], params["layers"])
+            cg = jax.tree.map(lambda l: l[i], cache)
+            x, nc = group_fn(x, (gp, cg))
+            ncs.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *ncs)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = x[:, 0] @ params["unembed"].astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged serving entry points (block-paged KV cache; see serve/paged_cache)
+# ---------------------------------------------------------------------------
+
+
+class PagedCtx(NamedTuple):
+    """Static+dynamic context threaded to the paged attention sublayers.
+    ``prefill`` is a Python bool (trace-static): it selects the whole-prompt
+    scatter+flash path vs the single-token append+gather path."""
+
+    page_table: jax.Array       # (B, pages_per_seq) int32 physical pages
+    prefill: bool
+
+
+def paged_supported(cfg) -> bool:
+    """Paged serving covers attention block patterns (SSM carries are O(1)
+    per-slot state — nothing to page)."""
+    return all(k in ATTN_KINDS for k in cfg.block_pattern)
+
+
+def init_paged_cache(cfg, num_pages: int, page_size: int, *,
+                     quantized: bool = False):
+    """Paged decode cache: per attention sublayer one
+    :class:`~repro.serve.paged_cache.PagedKV` pool of ``num_pages`` pages
+    (physical page 0 reserved as the trash page), stacked over layer groups
+    like :func:`init_cache`.  ``quantized`` stores int8 values + f16
+    per-(position, head) scales — the ``serve/kv_quant`` scheme applied at
+    append time."""
+    from repro.serve.paged_cache import init_paged_kv
+    if not paged_supported(cfg):
+        raise ValueError(
+            f"paged serving needs an attention block pattern; "
+            f"{cfg.name} has {cfg.block_pattern} (use T.decode_step)")
+    dt = jnp.dtype(cfg.dtype)
+    one_group = tuple(
+        (init_paged_kv(num_pages, page_size, cfg.num_kv_heads,
+                       cfg.resolved_head_dim, dt, quantized=quantized),)
+        for _ in cfg.block_pattern)
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.num_groups,) + l.shape),
+        one_group)
+
+
+def prefill(params, tokens, lengths, cache, page_table, cfg, *, mesh=None):
+    """Whole-prompt forward that fills the paged cache in ONE call.
+
+    tokens: (B, S) right-padded prompts; lengths: (B,) true prompt lengths;
+    page_table: (B, pages_per_seq).  Every position 0..S-1 is written
+    through the page table (padded tails land on the trash page or in slots
+    the request will overwrite during decode — both unobservable, because
+    attention masks by per-request prefix length), and attention over the
+    prompt itself is causal flash on the in-flight k/v.  Returns
+    ``(logits (B, vocab) at each request's last prompt token, new_cache)``.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.input_kind != "tokens":
+        raise ValueError("paged serving decodes token streams")
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * (cfg.d_model ** 0.5)
+    positions = jnp.arange(S)
+    paged = PagedCtx(page_table, True)
+
+    def group_fn(x, scan_in):
+        gp, cache_group = scan_in
+        x, _, _, nc = _apply_group(x, gp, cfg, mesh=mesh, positions=positions,
+                                   cache_group=cache_group, paged=paged)
+        return x, nc
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(group_fn, x, (params["layers"], cache))
+    else:
+        ncs = []
+        for i in range(cfg.num_groups):
+            gp = jax.tree.map(lambda l: l[i], params["layers"])
+            cg = jax.tree.map(lambda l: l[i], cache)
+            x, nc = group_fn(x, (gp, cg))
+            ncs.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *ncs)
+
+    x = rms_norm(x, params["final_norm"])
+    idx = jnp.clip(lengths - 1, 0, S - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = x_last @ params["unembed"].astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, new_cache
+
+
+def paged_decode_step(params, cache, tokens, lengths, page_table, cfg, *,
+                      mesh=None):
+    """One decode step with every request at its OWN position.
+
+    tokens: (B, 1) the last sampled token per request; lengths: (B,) the
+    absolute position that token is written at (== the request's current
+    token count).  Returns (logits (B, vocab), new_cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * (cfg.d_model ** 0.5)
+    paged = PagedCtx(page_table, False)
+
+    def group_fn(x, scan_in):
+        gp, cache_group = scan_in
+        x, _, _, nc = _apply_group(x, gp, cfg, mesh=mesh, positions=lengths,
+                                   cache_group=cache_group, paged=paged)
         return x, nc
 
     if cfg.scan_layers:

@@ -1,10 +1,36 @@
-"""Batched serving engine: continuous-batching style decode over a fixed
-slot pool, with prefill via the full forward and jitted single-token steps.
+"""Paged, continuously-batched serving engine (SHARK-Engine architecture).
 
-This is deliberately simple but real: requests enter a queue (``enqueue`` /
-``run``) or come as a batch (``generate``), get assigned slots, share jitted
-single-token decode steps (cache updates are functional), and leave when they
-emit EOS or hit ``max_new_tokens``.
+Requests enter a queue (``enqueue`` / ``run``) or come as a batch
+(``generate``), and the scheduler runs them through two jitted entry
+families:
+
+* **prefill** — ONE whole-prompt forward per admitted batch (bucketed to
+  power-of-two ``(batch, seq)`` shapes so the jit cache stays bounded) that
+  scatters every prompt position's k/v through per-request *page tables*
+  into a block-paged KV pool (``serve/paged_cache``).  This replaces the
+  seed's token-at-a-time teacher-forcing loop — and its left-pad bug, where
+  pad tokens entered the cache at *valid* positions and a short prompt's
+  output depended on its batch-mates.  Prompts are right-padded and masked
+  by per-request prefix length, so batched output == solo output.
+* **decode** — a single-token step over the full slot array with every
+  request at its OWN position (``T.paged_decode_step``).  Inactive slots
+  point at the reserved trash page and cost no correctness.
+
+Scheduling is continuous: a request's slot and pages return to the pool the
+moment it emits EOS or hits ``max_new_tokens``, and the next pending request
+is admitted immediately — no head-of-line blocking on the batch's
+``max(max_new_tokens)``, and finished requests never burn decode FLOPs.
+Admission is under a page budget (``num_pages``); a pending request that
+does not fit increments ``stats['blocked_admissions']`` (the ``ep_a2a``
+overflow-accounting idiom) and waits, preserving FIFO order.
+
+``kv_dtype='int8'`` stores the pool quantized via ``serve/kv_quant``'s
+symmetric per-(position, head) scheme — quantize at append, attend against
+int8 with f32 accumulation — roughly halving KV bytes per token.
+
+Sampling: ``greedy=True`` argmaxes; ``greedy=False`` temperature-samples
+with a per-step split of the engine's PRNG key, so a fixed ``seed`` makes a
+run deterministic.
 
 Grouped-GEMM backend selection is context-scoped (DESIGN: mixed fleets share
 one config while each host/engine picks its fastest available backend):
@@ -20,14 +46,15 @@ one config while each host/engine picks its fastest available backend):
 * ``generate`` resolves per batch slot and groups slots by resolved backend,
   so one batch can mix requests pinned to different backends.
 
-Decode steps are jitted per backend name (separate function objects keep the
-jit caches apart) with the concrete name baked into the config, and every
-call runs inside ``use_backend`` so an ambient scope at first-trace time
-cannot leak into the cached computation.
+Decode/prefill steps are jitted per backend name (separate function objects
+keep the jit caches apart) with the concrete name baked into the config, and
+every call runs inside ``use_backend`` so an ambient scope at first-trace
+time cannot leak into the cached computation.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -37,6 +64,7 @@ import numpy as np
 from repro.core import checkpoint as CK
 from repro.core import gmm_backend as GB
 from repro.models import transformer as T
+from repro.serve import paged_cache as PC
 
 
 @dataclass
@@ -49,11 +77,17 @@ class Request:
     done: bool = False
 
 
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
 class ServeEngine:
     def __init__(self, cfg, params, *, batch_slots: int = 4,
-                 capacity: int = 512, greedy: bool = True, seed: int = 0,
-                 gmm_backend: str | None = None, remat_policy=None,
-                 mesh=None):
+                 capacity: int = 512, page_size: int = 16,
+                 num_pages: int | None = None, kv_dtype: str | None = None,
+                 greedy: bool = True, temperature: float = 1.0,
+                 seed: int = 0, gmm_backend: str | None = None,
+                 remat_policy=None, mesh=None):
         # Snapshot the backend resolution at construction: precedence is the
         # explicit engine argument > active use_backend scope >
         # cfg.gmm_backend > env > auto, frozen into a ResolvedBackend.
@@ -67,6 +101,16 @@ class ServeEngine:
                                           config=cfg.remat_policy)
         self.cfg = cfg.replace(gmm_backend=self.backend.name,
                                remat_policy=self.remat_plan.spec)
+        if not T.paged_supported(cfg):
+            raise ValueError(
+                f"ServeEngine pages attention KV; {cfg.name} has "
+                f"block pattern {cfg.block_pattern} (SSM carries are O(1) "
+                f"per-slot state — serve those via T.decode_step directly)")
+        if kv_dtype not in (None, "model", "int8"):
+            raise ValueError(f"kv_dtype must be None|'model'|'int8', "
+                             f"got {kv_dtype!r}")
+        if not greedy and temperature <= 0:
+            raise ValueError("temperature must be > 0 for sampling")
         if cfg.is_moe:
             # Eagerly validate the plan's moe-scoped residual decisions
             # (coupled-FFN_A/B or save-Y_swi-under-recompute-A/B raise).
@@ -86,23 +130,57 @@ class ServeEngine:
         self.params = params
         self.slots = batch_slots
         self.capacity = capacity
+        self.page_size = page_size
+        self.quantized = kv_dtype == "int8"
+        self.pages_per_seq = PC.pages_needed(capacity, page_size)
+        # Default budget: full occupancy at max capacity, plus the trash page.
+        self.num_pages = (num_pages if num_pages is not None
+                          else 1 + batch_slots * self.pages_per_seq)
+        if self.num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (one is the trash page)")
         self.greedy = greedy
+        self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         self.pending: list[Request] = []
         self._decode_fns: dict[str, object] = {}
+        self._prefill_fns: dict[tuple, object] = {}
+        self.stats = {"prefill_calls": 0, "prefill_tokens": 0,
+                      "decode_steps": 0, "decode_slot_tokens": 0,
+                      "generated_tokens": 0, "blocked_admissions": 0,
+                      "peak_pages_used": 0}
+
+    # -- jitted entry points ------------------------------------------------
 
     def _decode_for(self, backend_name: str):
-        """The jitted single-token decode step specialized to one backend.
-        One function object per backend keeps their jit caches separate."""
+        """The jitted single-token decode step specialized to one backend —
+        full slot array, per-request positions.  One function object per
+        backend keeps their jit caches separate."""
         fn = self._decode_fns.get(backend_name)
         if fn is None:
             cfg = self.cfg.replace(gmm_backend=backend_name)
             fn = jax.jit(
-                lambda p, c, tok, pos: T.decode_step(
-                    p, c, {"tokens": tok}, pos, cfg, mesh=self.mesh),
+                lambda p, c, tok, lens, pt: T.paged_decode_step(
+                    p, c, tok, lens, pt, cfg, mesh=self.mesh),
                 donate_argnums=(1,))   # cache updated in place
             self._decode_fns[backend_name] = fn
         return fn
+
+    def _prefill_for(self, backend_name: str, bs: int, seq: int):
+        """The jitted whole-prompt prefill for one (backend, batch-bucket,
+        seq-bucket) — the SHARK per-batch-size entry-point family, with
+        power-of-two bucketing keeping the family finite."""
+        key = (backend_name, bs, seq)
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            cfg = self.cfg.replace(gmm_backend=backend_name)
+            fn = jax.jit(
+                lambda p, c, tok, lens, pt: T.prefill(
+                    p, tok, lens, c, pt, cfg, mesh=self.mesh),
+                donate_argnums=(1,))
+            self._prefill_fns[key] = fn
+        return fn
+
+    # -- validation ---------------------------------------------------------
 
     def resolve_request(self, request: Request) -> GB.ResolvedBackend:
         """The backend a request will decode with: its own override at the
@@ -112,75 +190,175 @@ class ServeEngine:
             return self.backend
         return GB.resolve(request.gmm_backend, config=self.cfg.gmm_backend)
 
+    def _limit(self, request: Request) -> int:
+        """Effective new-token budget: the cache holds ``prompt + (T - 1)``
+        written tokens for T generated, bounded by ``capacity``."""
+        return min(request.max_new_tokens,
+                   self.capacity - request.prompt.size + 1)
+
+    def _validate(self, request: Request) -> None:
+        self.resolve_request(request)
+        if request.prompt.size > self.capacity:
+            raise ValueError(
+                f"prompt of {request.prompt.size} tokens exceeds engine "
+                f"capacity {self.capacity}")
+        need = PC.pages_needed(
+            request.prompt.size + self._limit(request) - 1, self.page_size)
+        if need > self.num_pages - 1:
+            raise ValueError(
+                f"request needs {need} pages but the pool only has "
+                f"{self.num_pages - 1} allocatable pages")
+
     # -- queue API ----------------------------------------------------------
 
     def enqueue(self, request: Request) -> Request:
-        """Admit a request to the pending queue.  Backend validation happens
-        HERE — an unknown or unavailable ``gmm_backend`` raises at enqueue,
-        never mid-generate with other requests' tokens in flight."""
-        self.resolve_request(request)
+        """Admit a request to the pending queue.  Backend + budget
+        validation happens HERE — an unknown ``gmm_backend`` or an
+        impossible-to-schedule request raises at enqueue, never mid-generate
+        with other requests' tokens in flight."""
+        self._validate(request)
         self.pending.append(request)
         return request
 
     def run(self) -> list[Request]:
-        """Drain the pending queue in slot-sized batches."""
-        done: list[Request] = []
-        while self.pending:
-            batch = self.pending[:self.slots]
-            del self.pending[:self.slots]
-            done.extend(self.generate(batch))
-        return done
+        """Drain the pending queue.  The scheduler batches continuously, so
+        the whole queue goes in at once — slots refill as requests finish."""
+        batch = self.pending
+        self.pending = []
+        return self.generate(batch)
 
     # -- batched generation -------------------------------------------------
 
     def generate(self, requests: list[Request]) -> list[Request]:
-        assert len(requests) <= self.slots
-        # Resolve every slot up front (raises before any decode work), then
-        # group slots by resolved backend — one batch may mix overrides.
+        # Validate every request up front (raises before any decode work),
+        # then group by resolved backend — one batch may mix overrides.
+        for r in requests:
+            self._validate(r)
         resolved = [self.resolve_request(r) for r in requests]
         groups: dict[str, list[int]] = {}
         for i, rb in enumerate(resolved):
             groups.setdefault(rb.name, []).append(i)
         for name, idxs in groups.items():
-            self._generate_group([requests[i] for i in idxs], name)
+            self._serve_group([requests[i] for i in idxs], name)
         return requests
 
-    def _prefill(self, prompts: np.ndarray, backend_name: str):
-        """Sequential cache fill via the decode step (teacher-forcing each
-        prompt token).  Prompts are right-aligned to a common length."""
-        B, S = prompts.shape
-        cache = T.init_cache(self.cfg, B, self.capacity)
-        decode = self._decode_for(backend_name)
-        logits = None
-        for t in range(S):
-            logits, cache = decode(
-                self.params, cache, jnp.asarray(prompts[:, t:t + 1]),
-                jnp.array(t))
-        return logits, cache, S
+    def _sample(self, logits) -> np.ndarray:
+        """Next token per row.  Greedy argmaxes; otherwise temperature
+        sampling with a fresh per-step split of the engine key (fixed seed
+        => deterministic run)."""
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        self.key, k = jax.random.split(self.key)
+        nxt = jax.random.categorical(k, logits / self.temperature, axis=-1)
+        return np.asarray(nxt).astype(np.int32)
 
-    def _generate_group(self, requests: list[Request], backend_name: str):
-        """Greedy-decode one group of requests that share a backend."""
-        S = max(r.prompt.size for r in requests)
-        prompts = np.zeros((len(requests), S), np.int32)
-        for i, r in enumerate(requests):
-            prompts[i, S - r.prompt.size:] = r.prompt     # left-pad
+    def _serve_group(self, requests: list[Request], backend_name: str):
+        """Continuously serve one group of requests sharing a backend."""
+        ps = self.page_size
+        pps = self.pages_per_seq
+        pool = PC.PagePool(self.num_pages)
+        waiting = deque(requests)
+        free_slots = list(range(self.slots - 1, -1, -1))
+        owner: list[Request | None] = [None] * self.slots
+        pages_of: list[list[int] | None] = [None] * self.slots
+        page_table = np.full((self.slots, pps), PC.TRASH_PAGE, np.int32)
+        lengths = np.zeros(self.slots, np.int32)     # tokens in cache
+        last_tok = np.zeros((self.slots, 1), np.int32)
+        cache = T.init_paged_cache(self.cfg, self.num_pages, ps,
+                                   quantized=self.quantized)
         decode = self._decode_for(backend_name)
+
+        def finish(slot: int):
+            pool.free(pages_of[slot])
+            owner[slot] = None
+            pages_of[slot] = None
+            page_table[slot, :] = PC.TRASH_PAGE   # stale entries must not
+            lengths[slot] = 0                     # alias freshly reused pages
+            last_tok[slot, 0] = 0
+            free_slots.append(slot)
+
         # The use_backend scope pins trace-time resolution to this group's
         # backend even if the caller holds an ambient scope of their own.
         with GB.use_backend(backend_name):
-            logits, cache, pos = self._prefill(prompts, backend_name)
-            max_new = max(r.max_new_tokens for r in requests)
-            for _ in range(max_new):
-                nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-                for i, r in enumerate(requests):
-                    if not r.done and len(r.out_tokens) < r.max_new_tokens:
-                        r.out_tokens.append(int(nxt[i]))
-                        if nxt[i] == r.eos_id:
+            while waiting or any(o is not None for o in owner):
+                # -- admit from pending the moment slots + pages allow ------
+                admit: list[int] = []
+                while waiting and free_slots:
+                    r = waiting[0]
+                    need = PC.pages_needed(
+                        r.prompt.size + self._limit(r) - 1, ps)
+                    if need > pool.free_pages:
+                        # FIFO under the page budget: the head waits (and is
+                        # accounted), later requests do not jump it.
+                        self.stats["blocked_admissions"] += 1
+                        break
+                    waiting.popleft()
+                    slot = free_slots.pop()
+                    pgs = pool.alloc(need)
+                    owner[slot] = r
+                    pages_of[slot] = pgs
+                    page_table[slot, :] = PC.TRASH_PAGE
+                    page_table[slot, :need] = pgs
+                    admit.append(slot)
+
+                # -- prefill the newly admitted batch in ONE jitted call ----
+                if admit:
+                    sb = _pow2(max(owner[s].prompt.size for s in admit))
+                    bb = _pow2(len(admit))
+                    toks = np.zeros((bb, sb), np.int32)
+                    lens = np.zeros(bb, np.int32)
+                    pt = np.full((bb, pps), PC.TRASH_PAGE, np.int32)
+                    for i, s in enumerate(admit):
+                        p = owner[s].prompt
+                        toks[i, :p.size] = p
+                        lens[i] = p.size
+                        pt[i] = page_table[s]
+                    pf = self._prefill_for(backend_name, bb, sb)
+                    logits, cache = pf(self.params, cache, jnp.asarray(toks),
+                                       jnp.asarray(lens), jnp.asarray(pt))
+                    self.stats["prefill_calls"] += 1
+                    self.stats["prefill_tokens"] += int(lens.sum())
+                    nxt = self._sample(logits)
+                    for i, s in enumerate(admit):
+                        r = owner[s]
+                        tok = int(nxt[i])
+                        r.out_tokens.append(tok)
+                        self.stats["generated_tokens"] += 1
+                        lengths[s] = r.prompt.size
+                        last_tok[s, 0] = tok
+                        if tok == r.eos_id:
                             r.done = True
-                if all(r.done or len(r.out_tokens) >= r.max_new_tokens
-                       for r in requests):
-                    break
-                logits, cache = decode(
-                    self.params, cache, jnp.asarray(nxt[:, None]),
-                    jnp.array(pos))
-                pos += 1
+                        if r.done or len(r.out_tokens) >= self._limit(r):
+                            finish(s)
+
+                active = [s for s in range(self.slots)
+                          if owner[s] is not None]
+                if not active:
+                    continue
+
+                # -- one decode step over the full slot array ---------------
+                # Inactive slots write through the trash page and their
+                # logits rows are ignored — no per-shape re-jit as occupancy
+                # changes.
+                logits, cache = decode(self.params, cache,
+                                       jnp.asarray(last_tok),
+                                       jnp.asarray(lengths),
+                                       jnp.asarray(page_table))
+                self.stats["decode_steps"] += 1
+                self.stats["decode_slot_tokens"] += len(active)
+                nxt = self._sample(logits)
+                for s in active:
+                    r = owner[s]
+                    tok = int(nxt[s])
+                    r.out_tokens.append(tok)
+                    self.stats["generated_tokens"] += 1
+                    lengths[s] += 1
+                    last_tok[s, 0] = tok
+                    if tok == r.eos_id:
+                        r.done = True
+                    if r.done or len(r.out_tokens) >= self._limit(r):
+                        finish(s)
+
+        self.stats["peak_pages_used"] = max(
+            self.stats["peak_pages_used"],
+            self.num_pages - 1 - pool.min_free)

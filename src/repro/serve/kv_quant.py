@@ -26,7 +26,8 @@ class QuantizedKVCache(NamedTuple):
     k_scale: jax.Array    # f16  (B, C, Hkv, 1)
     v_q: jax.Array        # int8 (B, C, Hkv, Dh)
     v_scale: jax.Array    # f16  (B, C, Hkv, 1)
-    slot_pos: jax.Array   # int32 (C,)
+    slot_pos: jax.Array   # int32 (B, C) — per-request, so batched requests
+    # can sit at different positions (mixed-prompt-length serving)
 
 
 def quantize(x: jax.Array):
@@ -38,7 +39,7 @@ def quantize(x: jax.Array):
 
 
 def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
-    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
 
 
 def init_quant_cache(batch: int, capacity: int, n_kv: int,
@@ -48,24 +49,27 @@ def init_quant_cache(batch: int, capacity: int, n_kv: int,
         k_scale=jnp.zeros((batch, capacity, n_kv, 1), jnp.float16),
         v_q=jnp.zeros((batch, capacity, n_kv, head_dim), jnp.int8),
         v_scale=jnp.zeros((batch, capacity, n_kv, 1), jnp.float16),
-        slot_pos=jnp.full((capacity,), -1, jnp.int32),
+        slot_pos=jnp.full((batch, capacity), -1, jnp.int32),
     )
 
 
 def append(cache: QuantizedKVCache, k: jax.Array, v: jax.Array,
            pos: jax.Array) -> QuantizedKVCache:
-    """Append one token's k/v (B, Hkv, Dh) at absolute position ``pos``
-    (rolling over capacity)."""
-    C = cache.k_q.shape[1]
+    """Append one token's k/v (B, Hkv, Dh) at absolute position ``pos`` —
+    scalar (whole batch in lockstep) or (B,) per-request positions —
+    rolling over capacity."""
+    B, C = cache.slot_pos.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (B,))
     slot = (pos % C).astype(jnp.int32)
+    bidx = jnp.arange(B)
     kq, ks = quantize(k)
     vq, vs = quantize(v)
     return QuantizedKVCache(
-        k_q=cache.k_q.at[:, slot].set(kq),
-        k_scale=cache.k_scale.at[:, slot].set(ks),
-        v_q=cache.v_q.at[:, slot].set(vq),
-        v_scale=cache.v_scale.at[:, slot].set(vs),
-        slot_pos=cache.slot_pos.at[slot].set(pos.astype(jnp.int32)),
+        k_q=cache.k_q.at[bidx, slot].set(kq),
+        k_scale=cache.k_scale.at[bidx, slot].set(ks),
+        v_q=cache.v_q.at[bidx, slot].set(vq),
+        v_scale=cache.v_scale.at[bidx, slot].set(vs),
+        slot_pos=cache.slot_pos.at[bidx, slot].set(pos.astype(jnp.int32)),
     )
 
 
@@ -82,6 +86,7 @@ def decode_attention_quant(q: jax.Array, cache: QuantizedKVCache,
     B, _, Hq, Dh = q.shape
     _, C, Hkv, _ = cache.k_q.shape
     G = Hq // Hkv
+    pos = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (B,))
     qf = (q.reshape(B, Hkv, G, Dh) * Dh ** -0.5).astype(jnp.float32)
     s = jnp.einsum("bhgd,bchd->bhgc", qf,
                    cache.k_q.astype(jnp.float32))
@@ -89,10 +94,10 @@ def decode_attention_quant(q: jax.Array, cache: QuantizedKVCache,
         :, :, None, :]
     if cap:
         s = cap * jnp.tanh(s / cap)
-    valid = (cache.slot_pos >= 0) & (cache.slot_pos <= pos)
+    valid = (cache.slot_pos >= 0) & (cache.slot_pos <= pos[:, None])
     if window:
-        valid &= cache.slot_pos > pos - window
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+        valid &= cache.slot_pos > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     pv = p * cache.v_scale[..., 0].astype(jnp.float32).transpose(0, 2, 1)[
         :, :, None, :]

@@ -1,0 +1,226 @@
+"""Block-paged KV storage for the serving engine (SHARK-Engine direction).
+
+The seed engine held one dense ``(B, capacity, Hkv, Dh)`` slab per slot —
+decode memory scaled with ``slots x capacity`` whether or not a request ever
+reached ``capacity`` tokens, and a short request pinned its whole slab until
+the longest request in the batch finished.  This module replaces the slab
+with a pool of fixed-size *pages* shared by every request:
+
+* :class:`PagedKV` — one layer's page pool, ``(P, page_size, Hkv, Dh)`` in
+  the model dtype, or int8 values + f16 per-(position, head) scales when
+  quantized (the ``serve/kv_quant`` symmetric scheme, applied at write time);
+* per-request *page tables* ``(B, pages_per_seq)`` map logical token
+  positions to physical pages.  Unused table entries point at the reserved
+  **trash page** (physical page 0): writes to padded positions land there and
+  reads from it are always masked, so scatter/gather never needs bounds
+  branches;
+* :class:`PagePool` — the host-side free-list allocator.  Pages return to
+  the pool the moment a request finishes, which is what lets the scheduler
+  admit from ``pending`` without head-of-line blocking.
+
+Masking is by per-request *prefix length*: a gathered slot at logical
+position ``t`` is attended iff ``t <= pos_b`` (and inside the sliding window
+when one applies).  Right-padded prompts therefore never leak pad keys into
+another request's attention — the batched-vs-solo parity gate in
+``bench/serving.py`` holds by construction.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.kv_quant import quantize
+
+NEG_INF = -1e30
+
+#: physical page 0 is never allocated: page-table entries beyond a request's
+#: reservation point here, so padded-position writes have a harmless target
+#: and gathered trash is masked by the prefix-length test.
+TRASH_PAGE = 0
+
+
+class PagedKV(NamedTuple):
+    """One attention layer's page pool.  ``k``/``v`` are ``(P, page_size,
+    Hkv, Dh)`` in the storage dtype; int8 storage carries f16 per-vector
+    scales ``(P, page_size, Hkv, 1)`` (``None`` otherwise — the pytree
+    structure is the static quantization flag)."""
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array | None
+    v_scale: jax.Array | None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
+def init_paged_kv(num_pages: int, page_size: int, n_kv: int, head_dim: int,
+                  dtype, *, quantized: bool = False) -> PagedKV:
+    shape = (num_pages, page_size, n_kv, head_dim)
+    if quantized:
+        return PagedKV(k=jnp.zeros(shape, jnp.int8),
+                       v=jnp.zeros(shape, jnp.int8),
+                       k_scale=jnp.zeros(shape[:-1] + (1,), jnp.float16),
+                       v_scale=jnp.zeros(shape[:-1] + (1,), jnp.float16))
+    return PagedKV(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   k_scale=None, v_scale=None)
+
+
+# ---------------------------------------------------------------------------
+# writes
+# ---------------------------------------------------------------------------
+
+
+def _store(x, quantized: bool, dtype):
+    """(values, scales|None) in the pool's storage layout."""
+    if quantized:
+        return quantize(x)
+    return x.astype(dtype), None
+
+
+def write_prefill(pages: PagedKV, k: jax.Array, v: jax.Array,
+                  page_table: jax.Array) -> PagedKV:
+    """Scatter a whole right-padded prompt's k/v ``(B, S, Hkv, Dh)`` through
+    ``page_table`` ``(B, pages_per_seq)``: logical position ``t`` of request
+    ``b`` lands in ``page_table[b, t // page_size]`` at offset
+    ``t % page_size``.  Positions past a request's reservation map to the
+    trash page (never attended), so the padded tail needs no branch."""
+    B, S = k.shape[:2]
+    ps = pages.page_size
+    t = jnp.arange(S)
+    phys = page_table[:, t // ps].reshape(-1)            # (B*S,)
+    off = jnp.broadcast_to(t % ps, (B, S)).reshape(-1)
+    kq, ks = _store(k, pages.quantized, pages.k.dtype)
+    vq, vs = _store(v, pages.quantized, pages.v.dtype)
+    flat = lambda x: x.reshape((B * S,) + x.shape[2:])
+    return PagedKV(
+        k=pages.k.at[phys, off].set(flat(kq)),
+        v=pages.v.at[phys, off].set(flat(vq)),
+        k_scale=None if ks is None else pages.k_scale.at[phys, off].set(flat(ks)),
+        v_scale=None if vs is None else pages.v_scale.at[phys, off].set(flat(vs)),
+    )
+
+
+def write_decode(pages: PagedKV, k: jax.Array, v: jax.Array,
+                 page_table: jax.Array, positions: jax.Array) -> PagedKV:
+    """Scatter one token per request: ``k``/``v`` ``(B, 1, Hkv, Dh)`` at
+    per-request absolute ``positions`` ``(B,)``."""
+    B = k.shape[0]
+    ps = pages.page_size
+    phys = page_table[jnp.arange(B), positions // ps]     # (B,)
+    off = positions % ps
+    kq, ks = _store(k[:, 0], pages.quantized, pages.k.dtype)
+    vq, vs = _store(v[:, 0], pages.quantized, pages.v.dtype)
+    return PagedKV(
+        k=pages.k.at[phys, off].set(kq),
+        v=pages.v.at[phys, off].set(vq),
+        k_scale=None if ks is None else pages.k_scale.at[phys, off].set(ks),
+        v_scale=None if vs is None else pages.v_scale.at[phys, off].set(vs),
+    )
+
+
+# ---------------------------------------------------------------------------
+# attend
+# ---------------------------------------------------------------------------
+
+
+def paged_attention(q: jax.Array, pages: PagedKV, page_table: jax.Array,
+                    positions: jax.Array, *, window: int = 0,
+                    cap: float = 0.0) -> jax.Array:
+    """One-token attention against the paged cache.
+
+    q: ``(B, 1, Hq, Dh)``; ``positions`` ``(B,)`` is each request's current
+    (already written) token position.  The request's pages are gathered to a
+    ``(B, pages_per_seq * page_size, Hkv, Dh)`` view and masked by logical
+    position — ``t <= pos_b`` — so trash-page slots and not-yet-written tail
+    slots never contribute.  For int8 pools the score/value dots run against
+    the int8 arrays with f32 accumulation and the per-vector scale applied to
+    the score row (no dequantized f32 copy of the gathered pages)."""
+    B, _, Hq, Dh = q.shape
+    ps = pages.page_size
+    T = page_table.shape[1] * ps
+    Hkv = pages.k.shape[2]
+    G = Hq // Hkv
+    gather = lambda a: a[page_table].reshape((B, T) + a.shape[2:])
+    kg, vg = gather(pages.k), gather(pages.v)
+    qf = q.reshape(B, Hkv, G, Dh) * Dh**-0.5
+
+    if pages.quantized:
+        s = jnp.einsum("bhgd,bthd->bhgt", qf.astype(jnp.float32),
+                       kg.astype(jnp.float32))
+        s = s * gather(pages.k_scale)[..., 0].astype(jnp.float32).transpose(
+            0, 2, 1)[:, :, None, :]
+    else:
+        s = jnp.einsum("bhgd,bthd->bhgt", qf.astype(kg.dtype), kg,
+                       preferred_element_type=jnp.float32)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    t_ids = jnp.arange(T)
+    valid = t_ids[None, :] <= positions[:, None]          # (B, T)
+    if window:
+        valid &= t_ids[None, :] > positions[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if pages.quantized:
+        pv = p * gather(pages.v_scale)[..., 0].astype(jnp.float32).transpose(
+            0, 2, 1)[:, :, None, :]
+        out = jnp.einsum("bhgt,bthd->bhgd", pv, vg.astype(jnp.float32))
+    else:
+        out = jnp.einsum("bhgt,bthd->bhgd", p.astype(vg.dtype), vg,
+                         preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# host-side page allocator
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Free-list page allocator (host side; page indices are plain ints).
+
+    Page ``TRASH_PAGE`` is reserved at construction.  Frees push onto the
+    list tail and allocs pop from it (LIFO), so a request admitted right
+    after another finishes reuses the same physical pages — the property the
+    page-table-reuse regression test pins down."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (one is the reserved trash page)")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, TRASH_PAGE, -1))
+        self.min_free = len(self._free)       # low-water mark (stats)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        """Pop ``n`` pages; raises if the pool cannot satisfy the request
+        (callers check :attr:`free_pages` first — admission control)."""
+        if n > len(self._free):
+            raise RuntimeError(f"page pool exhausted: want {n}, "
+                               f"have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self.min_free = min(self.min_free, len(self._free))
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p == TRASH_PAGE or p >= self.num_pages:
+                raise ValueError(f"freeing invalid page {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+        self._free.extend(reversed(pages))
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-max(n_tokens, 1) // page_size)

@@ -130,8 +130,9 @@ def cache_specs(cfg, cache_shapes, mesh):
         ndim = len(shape)
         if ndim == 0:
             return P()
-        if ndim == 1:            # slot_pos (C,) — replicate
-            return P(None)
+        if ndim == 1:            # 1-D metadata — replicate.  (slot_pos is
+            return P(None)       # (groups, B, C) now: batch + capacity
+                                 # sharded below, like the k/v it indexes)
         axes = [None] * ndim     # axes[0] = groups dim
         b_ax = _fit(shape[1], mesh, dp) or _fit(shape[1], mesh, ("data",))
         axes[1] = b_ax

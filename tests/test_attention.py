@@ -67,7 +67,7 @@ def test_decode_matches_full_forward():
     for t in range(S):
         kc = cache.k.at[:, t].set(k[:, t])
         vc = cache.v.at[:, t].set(v[:, t])
-        sp = cache.slot_pos.at[t].set(t)
+        sp = cache.slot_pos.at[:, t].set(t)
         cache = KVCache(kc, vc, sp)
         out_t = decode_attention(q[:, t:t + 1], cache.k, cache.v,
                                  cache.slot_pos, jnp.array(t))
@@ -85,12 +85,32 @@ def test_decode_rolling_buffer_window():
         slot = t % W
         cache = KVCache(cache.k.at[:, slot].set(k[:, t]),
                         cache.v.at[:, slot].set(v[:, t]),
-                        cache.slot_pos.at[slot].set(t))
+                        cache.slot_pos.at[:, slot].set(t))
         out_t = decode_attention(q[:, t:t + 1], cache.k, cache.v,
                                  cache.slot_pos, jnp.array(t), window=W)
         np.testing.assert_allclose(np.asarray(out_t[:, 0]),
                                    np.asarray(full[:, t]), atol=2e-5,
                                    err_msg=f"t={t}")
+
+
+def test_decode_per_request_positions():
+    """(B,) per-request positions: each request's row must equal a solo
+    decode at its own position — the serving engine's mixed-length case."""
+    B, S, Hq, Hkv, Dh = 3, 32, 4, 2, 16
+    q, k, v = _qkv(5, B, S, S, Hq, Hkv, Dh)
+    cache = init_kv_cache(B, S, Hkv, Dh, jnp.float32)
+    for t in range(S):
+        cache = KVCache(cache.k.at[:, t].set(k[:, t]),
+                        cache.v.at[:, t].set(v[:, t]),
+                        cache.slot_pos.at[:, t].set(t))
+    pos = jnp.array([5, 17, 31])
+    out = decode_attention(q[:, :1], cache.k, cache.v, cache.slot_pos, pos)
+    for b in range(B):
+        solo = decode_attention(q[b:b + 1, :1], cache.k[b:b + 1],
+                                cache.v[b:b + 1], cache.slot_pos[b:b + 1],
+                                jnp.array(int(pos[b])))
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(solo[0]),
+                                   atol=2e-5, err_msg=f"b={b}")
 
 
 def test_prefix_continuation_q_offset():

@@ -18,6 +18,16 @@ def test_quant_roundtrip_error():
     assert q.dtype == jnp.int8 and s.dtype == jnp.float16
 
 
+def test_dequantize_honors_dtype():
+    """Regression: dequantize used to always return f32 whatever ``dtype``
+    said."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 3, 16))
+    q, s = KQ.quantize(x)
+    assert KQ.dequantize(q, s).dtype == jnp.float32
+    assert KQ.dequantize(q, s, jnp.bfloat16).dtype == jnp.bfloat16
+    assert KQ.dequantize(q, s, jnp.float16).dtype == jnp.float16
+
+
 @pytest.mark.parametrize("window", [0, 16])
 def test_quant_decode_matches_fp(window):
     """Attention against the int8 cache tracks the fp cache closely."""
@@ -32,7 +42,7 @@ def test_quant_decode_matches_fp(window):
     for t in range(S):
         fp = KVCache(fp.k.at[:, t].set(kv_k[:, t]),
                      fp.v.at[:, t].set(kv_v[:, t]),
-                     fp.slot_pos.at[t].set(t))
+                     fp.slot_pos.at[:, t].set(t))
         qc = KQ.append(qc, kv_k[:, t], kv_v[:, t], jnp.array(t))
     pos = jnp.array(S - 1)
     ref = decode_attention(q, fp.k, fp.v, fp.slot_pos, pos, window=window)
@@ -59,4 +69,37 @@ def test_rolling_quant_cache():
         k = jnp.full((B, Hkv, Dh), float(t))
         qc = KQ.append(qc, k, k, jnp.array(t))
     pos = np.asarray(qc.slot_pos)
-    assert sorted(pos.tolist()) == list(range(12, 20))
+    assert pos.shape == (B, W)
+    assert sorted(pos[0].tolist()) == list(range(12, 20))
+
+
+def test_quant_per_request_positions():
+    """(B,) per-request append + attend: each row equals its solo run (the
+    shared-(C,) slot_pos bug made this impossible — one request's rolling
+    overwrite clobbered every request's position bookkeeping)."""
+    B, C, Hq, Hkv, Dh = 2, 16, 2, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, Dh))
+    kv_k = jax.random.normal(ks[1], (B, C, Hkv, Dh))
+    kv_v = jax.random.normal(ks[2], (B, C, Hkv, Dh))
+    lens = [5, 11]                       # request b attends lens[b] tokens
+    qc = KQ.init_quant_cache(B, C, Hkv, Dh)
+    for t in range(C):
+        qc = KQ.append(qc, kv_k[:, t], kv_v[:, t], jnp.array(t))
+    # per-request attend positions: slots past a request's own length carry
+    # slot_pos > pos and must be masked for that request only
+    out = KQ.decode_attention_quant(q, qc, jnp.array([L - 1 for L in lens]))
+    for b, L in enumerate(lens):
+        solo = KQ.init_quant_cache(1, C, Hkv, Dh)
+        for t in range(L):
+            solo = KQ.append(solo, kv_k[b:b + 1, t], kv_v[b:b + 1, t],
+                             jnp.array(t))
+        ref = KQ.decode_attention_quant(q[b:b + 1], solo, jnp.array(L - 1))
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(ref[0]),
+                                   atol=1e-5, err_msg=f"b={b}")
+    # per-request APPEND positions land in per-request slots
+    stag = KQ.init_quant_cache(B, C, Hkv, Dh)
+    stag = KQ.append(stag, kv_k[:, 0], kv_v[:, 0], jnp.array([2, 7]))
+    sp = np.asarray(stag.slot_pos)
+    assert sp[0, 2] == 2 and sp[1, 7] == 7
+    assert sp[0, 7] == -1 and sp[1, 2] == -1

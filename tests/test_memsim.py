@@ -245,3 +245,48 @@ def test_committed_baseline_carries_sim_entries():
         for mode in ("single", "ep", "ep_a2a"):
             assert f"peak_sim/tiny_moe/{plan}/{mode}" in entries
         assert f"peak_sim/tiny_dense/{plan}/single" in entries
+
+
+# ---------------------------------------------------------------------------
+# serve mode: paged KV pools + inference activations
+# ---------------------------------------------------------------------------
+
+
+def test_kv_page_bytes_matches_real_pool():
+    """The jax-free arithmetic must price the ACTUAL paged pool pytree
+    exactly, for both storage layouts."""
+    from repro.serve.kv_quant import cache_bytes
+    num_pages, ps = 9, 8
+    for quantized in (False, True):
+        pool = T.init_paged_cache(MOE, num_pages, ps, quantized=quantized)
+        # cache_bytes counts every layer's pool; kv_page_bytes is the same
+        # arithmetic without building arrays
+        assert memsim.kv_page_bytes(MOE, num_pages, ps,
+                                    quantized=quantized) \
+            == cache_bytes(pool)
+
+
+def test_kv_bytes_int8_vs_bf16_ratio():
+    """int8 + f16 scales vs bf16 dense — the serving bench's >= 1.8x gate,
+    held already at the shape-arithmetic level."""
+    bf16 = memsim.kv_bytes_per_token(MOE, dtype="bfloat16")
+    int8 = memsim.kv_bytes_per_token(MOE, quantized=True)
+    assert bf16 / int8 >= 1.8
+
+
+def test_simulate_serve_phases():
+    tl = memsim.simulate_serve(MOE, batch_slots=4, num_pages=33,
+                               page_size=16, prefill_tokens=128)
+    assert [p.name for p in tl.phases] == ["prefill", "decode"]
+    pool = memsim.kv_page_bytes(MOE, 33, 16)
+    assert all(p.held_bytes == pool for p in tl.phases)
+    assert tl.base_bytes == memsim.param_bytes(MOE)
+    # prefill works on 128 tokens, decode on 4 — prefill transients dominate
+    pre, dec = tl.phases
+    assert pre.transient_bytes > dec.transient_bytes
+    assert tl.peak_bytes > tl.base_bytes + pool
+    # the quantized pool shrinks held bytes in both phases
+    tq = memsim.simulate_serve(MOE, batch_slots=4, num_pages=33,
+                               page_size=16, prefill_tokens=128,
+                               quantized=True)
+    assert tq.phases[0].held_bytes < tl.phases[0].held_bytes
