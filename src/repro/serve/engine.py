@@ -147,7 +147,7 @@ class ServeEngine:
         self.stats = {"prefill_calls": 0, "prefill_tokens": 0,
                       "decode_steps": 0, "decode_slot_tokens": 0,
                       "generated_tokens": 0, "blocked_admissions": 0,
-                      "peak_pages_used": 0}
+                      "truncated_budgets": 0, "peak_pages_used": 0}
 
     # -- jitted entry points ------------------------------------------------
 
@@ -198,6 +198,10 @@ class ServeEngine:
 
     def _validate(self, request: Request) -> None:
         self.resolve_request(request)
+        if request.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {request.max_new_tokens} "
+                f"(prefill always samples one token)")
         if request.prompt.size > self.capacity:
             raise ValueError(
                 f"prompt of {request.prompt.size} tokens exceeds engine "
@@ -293,6 +297,9 @@ class ServeEngine:
                         self.stats["blocked_admissions"] += 1
                         break
                     waiting.popleft()
+                    if self._limit(r) < r.max_new_tokens:
+                        # Capacity silently bounds the budget; surface it.
+                        self.stats["truncated_budgets"] += 1
                     slot = free_slots.pop()
                     pgs = pool.alloc(need)
                     owner[slot] = r
@@ -303,7 +310,13 @@ class ServeEngine:
 
                 # -- prefill the newly admitted batch in ONE jitted call ----
                 if admit:
-                    sb = _pow2(max(owner[s].prompt.size for s in admit))
+                    # Clamp the pow2 seq bucket to the page table's logical
+                    # width: a wider bucket would make write_prefill's pad
+                    # tail spill past the table (routed to the trash page,
+                    # but the clamp keeps the prefill shape honest and the
+                    # jit-cache family within the table).
+                    sb = min(_pow2(max(owner[s].prompt.size for s in admit)),
+                             pps * ps)
                     bb = _pow2(len(admit))
                     toks = np.zeros((bb, sb), np.int32)
                     lens = np.zeros(bb, np.int32)

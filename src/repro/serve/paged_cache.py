@@ -92,11 +92,22 @@ def write_prefill(pages: PagedKV, k: jax.Array, v: jax.Array,
     ``page_table`` ``(B, pages_per_seq)``: logical position ``t`` of request
     ``b`` lands in ``page_table[b, t // page_size]`` at offset
     ``t % page_size``.  Positions past a request's reservation map to the
-    trash page (never attended), so the padded tail needs no branch."""
+    trash page (never attended), so the padded tail needs no branch.
+
+    ``S`` may exceed the table's logical width ``pages_per_seq * page_size``
+    (callers bucket prompts to power-of-two lengths): columns past the table
+    are routed to the trash page explicitly.  Without that routing, JAX's
+    clamping gather would alias them onto the LAST table column and the pad
+    tail would scatter over the request's own final page — silently
+    corrupting valid prompt KV whenever the bucket overshoots the table."""
     B, S = k.shape[:2]
     ps = pages.page_size
     t = jnp.arange(S)
-    phys = page_table[:, t // ps].reshape(-1)            # (B*S,)
+    col = t // ps
+    ncols = page_table.shape[1]
+    phys = jnp.where(col < ncols,
+                     page_table[:, jnp.minimum(col, ncols - 1)],
+                     TRASH_PAGE).reshape(-1)             # (B*S,)
     off = jnp.broadcast_to(t % ps, (B, S)).reshape(-1)
     kq, ks = _store(k, pages.quantized, pages.k.dtype)
     vq, vs = _store(v, pages.quantized, pages.v.dtype)
@@ -141,9 +152,11 @@ def paged_attention(q: jax.Array, pages: PagedKV, page_table: jax.Array,
     (already written) token position.  The request's pages are gathered to a
     ``(B, pages_per_seq * page_size, Hkv, Dh)`` view and masked by logical
     position — ``t <= pos_b`` — so trash-page slots and not-yet-written tail
-    slots never contribute.  For int8 pools the score/value dots run against
-    the int8 arrays with f32 accumulation and the per-vector scale applied to
-    the score row (no dequantized f32 copy of the gathered pages)."""
+    slots never contribute.  For int8 pools the per-vector scales are applied
+    to the score/value rows rather than to the storage: the RESIDENT pool is
+    never dequantized, though the gathered per-step ``(B, T)`` view is upcast
+    to f32 for the dots (transient, proportional to one step's working set,
+    not to the pool)."""
     B, _, Hq, Dh = q.shape
     ps = pages.page_size
     T = page_table.shape[1] * ps

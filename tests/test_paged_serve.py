@@ -104,6 +104,56 @@ def test_init_paged_cache_rejects_ssm_patterns():
         ServeEngine(ssm_cfg, {}, batch_slots=1)
 
 
+def test_write_prefill_tail_past_table_goes_to_trash():
+    """S beyond the page table's logical width must spill to the trash page,
+    never alias onto the last real page.  Regression: JAX's clamping gather
+    sent out-of-range columns to the LAST table column, so a pow2 prefill
+    bucket wider than the table scattered pad garbage over the request's own
+    final page of valid prompt KV."""
+    B, ps, n_pages = 2, 4, 5
+    Hkv, Dh = 2, 8
+    pt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)   # width 2 -> T = 8
+    S = 12                                          # 4 positions past the table
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, S, Hkv, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, Dh))
+    pool = PC.write_prefill(PC.init_paged_kv(n_pages, ps, Hkv, Dh,
+                                             jnp.float32), k, v, pt)
+    for b in range(B):
+        for t in range(8):                          # in-table positions exact
+            np.testing.assert_array_equal(
+                np.asarray(pool.k[int(pt[b, t // ps]), t % ps]),
+                np.asarray(k[b, t]))
+
+
+def test_engine_nonaligned_capacity_matches_aligned(params):
+    """A capacity that is not pow2-aligned to the page grid (48 = 3 pages of
+    16, but _pow2(40) = 64) must generate the same tokens as an aligned one.
+    Regression: the prefill bucket overshot the page table and the pad tail
+    overwrote the prompt's last real page — silent wrong tokens on exactly
+    the configs the parity bench never exercised."""
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, CFG.vocab_size, size=40).astype(np.int32)
+    mis = ServeEngine(CFG, params, batch_slots=1, capacity=48, page_size=16)
+    ali = ServeEngine(CFG, params, batch_slots=1, capacity=64, page_size=16)
+    got = mis.generate(_reqs([prompt], max_new=4))[0]
+    ref = ali.generate(_reqs([prompt], max_new=4))[0]
+    assert got.out_tokens == ref.out_tokens
+
+
+def test_zero_budget_rejected_and_truncation_accounted(params):
+    """max_new_tokens < 1 raises at validation (prefill always samples one
+    token, so a 0 budget cannot be honored), and a budget silently bounded
+    by capacity is surfaced in stats['truncated_budgets']."""
+    eng = ServeEngine(CFG, params, batch_slots=1, capacity=16, page_size=8)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.enqueue(Request(prompt=np.asarray([1, 2], np.int32),
+                            max_new_tokens=0))
+    prompt = np.arange(1, 13, dtype=np.int32)       # 12 + 64 > capacity 16
+    done = eng.generate(_reqs([prompt], max_new=64))[0]
+    assert eng.stats["truncated_budgets"] == 1
+    assert len(done.out_tokens) == 16 - 12 + 1
+
+
 # ---------------------------------------------------------------------------
 # continuous scheduler
 # ---------------------------------------------------------------------------
