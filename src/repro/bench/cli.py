@@ -138,6 +138,23 @@ def main(argv: list[str] | None = None) -> int:
                   "than the unfused pallas path")
         ok = ok and not fails
 
+    # Parallel same-run gates: the roofline cost model's predicted ep vs
+    # ep_a2a ranking must agree with the wall times measured in THIS run,
+    # the chunked-overlap exchange must hold parity with the unchunked one,
+    # and `auto` must have resolved to the predicted winner.
+    from repro.bench.timing import parallel_gate_failures
+    for rec in records:
+        if rec["suite"] != "kernels":
+            continue
+        fails = parallel_gate_failures(rec["entries"])
+        print("== parallel same-run gates ==")
+        for line in fails:
+            print(line)
+        if not fails:
+            print("OK: predicted mode ranking agrees with measured, "
+                  "chunked exchange holds parity, auto picked the winner")
+        ok = ok and not fails
+
     # Serving same-run gates: batched-vs-solo token parity (the left-pad
     # bugfix), decode slot-steps == sum(T_r - 1) (continuous slot release),
     # and the int8 paged pool's measured bytes-per-token advantage over

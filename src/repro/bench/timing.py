@@ -242,6 +242,147 @@ def fused_gate_failures(entries: list) -> list:
     return fails
 
 
+def parallel_bench_config():
+    """The MoE shape the ``parallel/*`` family benches: h ≈ 3d with a tight
+    exchange capacity — the region where the roofline cost model predicts
+    the token exchange beats replicated EP outright (and where the measured
+    CPU ranking agrees, with a wide margin on both sides).  h % 4 != 0
+    keeps tp out of the ranking on the 4-way model axis, mirroring the
+    awkward-ff paper configs."""
+    from repro.configs import get_config
+    return get_config("mixtral_8x7b").reduced().replace(
+        num_layers=2, num_heads=4, num_kv_heads=2, head_dim=16,
+        vocab_size=128, sliding_window=16, attn_chunk=16,
+        num_experts=8, top_k=2, d_model=64, moe_d_ff=198,
+        moe_a2a_capacity=1.0)
+
+
+def parallel_entries(L: int = 2048, iters: int = 5) -> list:
+    """MoE distribution modes timed on the 8-virtual-device (2 data x 4
+    model) debug mesh, next to the roofline cost model's predictions for
+    the SAME config x mesh x slab — the measurement half of the ``auto``
+    optimizer's validation loop.
+
+    Per mode: median fwd+grad wall time of one jitted ``moe_sublayer`` call
+    (informational vs the baseline — CI wall time drifts) plus the
+    predicted ``t_total`` entry.  :func:`parallel_gate_failures` pairs them
+    in the same run: the predicted ep vs ep_a2a ranking must agree with the
+    measured one, and the chunked-overlap path must not be slower than the
+    unchunked exchange."""
+    if len(jax.devices()) < 8:
+        import sys
+        print("# skipping parallel entries: need >= 8 host devices "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "before jax initializes; `python -m repro.bench` does this "
+              "automatically)", file=sys.stderr)
+        return []
+    from repro import roofline
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models.moe_block import init_moe_params, moe_sublayer
+
+    cfg = parallel_bench_config()
+    mesh = make_debug_mesh(2, 4)
+    decision = roofline.select_moe_parallel(cfg, mesh, L)
+    pred = {c.mode: c for c in decision.table}
+    p = init_moe_params(jax.random.PRNGKey(0), cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, L, cfg.d_model),
+                          jnp.float32)
+    meta = {"L": L, "d": cfg.d_model, "h": cfg.moe_d_ff,
+            "E": cfg.num_experts, "k": cfg.top_k,
+            "capacity": cfg.moe_a2a_capacity, "mesh": "2x4"}
+
+    def timed(mode, chunks):
+        c = cfg.replace(moe_parallel=mode, moe_a2a_chunks=chunks)
+
+        def loss(x, p):
+            y, _ = moe_sublayer(x, p, c, mesh=mesh, dp_axes=("data",))
+            return (y.astype(jnp.float32) ** 2).mean()
+
+        f = jax.jit(jax.value_and_grad(loss))
+        with mesh:
+            # warmup=2: the first post-compile call still carries allocator
+            # warmup on the 8-virtual-device host mesh, and the chunked gate
+            # pairs wall times at a few-percent resolution.
+            return median_time_us(f, x, p, warmup=2, iters=iters)
+
+    out = [entry("kernels/parallel/auto_mode",
+                 float(decision.mode == "ep_a2a"), kind="count", unit="bool",
+                 tolerance_pct=0.0, resolved=decision.mode,
+                 source=decision.source, **meta)]
+    for label, mode, chunks in (("ep", "ep", 1), ("ep_a2a", "ep_a2a", 1),
+                                ("ep_a2a_chunked", "ep_a2a", 2)):
+        us = timed(mode, chunks)
+        out.append(entry(f"kernels/parallel/{label}/time", us,
+                         kind="time_us", unit="us", chunks=chunks, **meta))
+        pc = pred[mode]
+        out.append(entry(f"kernels/parallel/{label}/predicted",
+                         pc.t_total_s * 1e6 if chunks == 1 else
+                         _chunked_predicted_us(cfg, mesh, L, chunks),
+                         kind="time_us", unit="us", chunks=chunks,
+                         feasible=pc.feasible, **meta))
+    return out
+
+
+def _chunked_predicted_us(cfg, mesh, L, chunks) -> float:
+    """Predicted t_total of the chunked-overlap exchange (the cost model
+    reads ``cfg.moe_a2a_chunks``)."""
+    from repro import roofline
+    d = roofline.select_moe_parallel(
+        cfg.replace(moe_a2a_chunks=chunks), mesh, L)
+    return next(c.t_total_s for c in d.table if c.mode == "ep_a2a") * 1e6
+
+
+#: measured chunked/unchunked slack: XLA's async-collective overlap does not
+#: exist on the CPU host backend, so the chunked path only has to hold
+#: parity there, not win — and host-mesh wall clocks pair at ~±10% noise
+#: (repeated solo runs of the same binary span 0.95-1.13x), so the gate
+#: only catches gross regressions such as a serialized per-chunk sync.
+PARALLEL_CHUNK_TOL = 1.25
+
+
+def parallel_gate_failures(entries: list) -> list:
+    """Same-run pairing gates for the ``parallel/*`` family: (1) the cost
+    model's predicted ep vs ep_a2a ranking must agree with the measured
+    ranking of the SAME run, (2) the chunked-overlap exchange must not be
+    slower than the unchunked one (within :data:`PARALLEL_CHUNK_TOL` — CPU
+    runners have no async-collective overlap to win with), and (3) ``auto``
+    must have resolved to the predicted winner.  Returns human-readable
+    failure lines (empty == all gates hold)."""
+    by_name = {e["name"]: e for e in entries}
+    pre = "kernels/parallel"
+    names = (f"{pre}/ep/time", f"{pre}/ep_a2a/time",
+             f"{pre}/ep/predicted", f"{pre}/ep_a2a/predicted",
+             f"{pre}/ep_a2a_chunked/time", f"{pre}/auto_mode")
+    got = [by_name.get(n) for n in names]
+    if all(g is None for g in got):
+        # No parallel family at all (device-starved/legacy record): nothing
+        # to pair.  The CI workflow asserts the family's presence
+        # independently on the 8-device legs.
+        return []
+    if any(g is None for g in got):
+        return [f"PARALLEL {pre}/* family incomplete in this run "
+                "(regenerate the record with the current suite)"]
+    ep_t, a2a_t, ep_p, a2a_p, ch_t, auto = (g["value"] for g in got)
+    fails = []
+    if (ep_p < a2a_p) != (ep_t < a2a_t):
+        fails.append(
+            f"PARALLEL predicted ranking disagrees with measured: "
+            f"predicted ep={ep_p:.0f}us vs ep_a2a={a2a_p:.0f}us, measured "
+            f"ep={ep_t:.0f}us vs ep_a2a={a2a_t:.0f}us in the same run")
+    if ch_t > a2a_t * PARALLEL_CHUNK_TOL:
+        fails.append(
+            f"PARALLEL {pre}/ep_a2a_chunked/time: {ch_t:.0f}us vs unchunked "
+            f"{a2a_t:.0f}us in the same run; the chunked-overlap path must "
+            f"not be slower (tol {PARALLEL_CHUNK_TOL:.2f}x)")
+    want = "ep" if ep_p < a2a_p else "ep_a2a"
+    resolved = by_name[f"{pre}/auto_mode"]["meta"].get("resolved")
+    if resolved != want:
+        fails.append(
+            f"PARALLEL auto resolved to {resolved!r} but the cost model's "
+            f"predicted winner in the same run is {want!r}")
+    return fails
+
+
 def train_step_entries(steps: int = 3) -> list:
     """Per-step wall time of the tiny-config train loop, collected through
     ``train.loop``'s ``step_hook`` (the hook the harness regresses against)."""
@@ -277,6 +418,11 @@ def kernels_suite(*, small: bool = False) -> list:
                                include_pallas=small)
     out += fused_path_entries(L=64 if small else 128,
                               iters=3 if small else 5)
+    # The parallel family keeps L=2048 even in the small sweep: at L=1024
+    # the chunked exchange's per-hop fixed overhead (no async overlap on the
+    # host backend) dominates the halved chunk and the parity gate turns
+    # into a coin flip; at 2048 chunked holds parity or wins on CPU.
+    out += parallel_entries(L=2048, iters=3 if small else 5)
     out += train_step_entries()
     return out
 

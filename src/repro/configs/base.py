@@ -29,11 +29,16 @@ class ModelConfig:
     moe_d_ff: int = 0                    # per-expert hidden dim
     moe_impl: str = "blaze"              # blaze | blaze_pallas | megablocks | dense
     moe_parallel: str = "auto"           # distribution mode: auto | ep |
-    # ep_a2a | tp (README "Distribution modes"; auto -> ep when num_experts
-    # divides the 'model' axis, else tp)
-    moe_a2a_capacity: float = 2.0        # ep_a2a: per-destination-rank slot
-    # capacity factor relative to the uniform share L*k/n_model; slots beyond
+    # ep_a2a | ep_a2a_hier | tp (README "Distribution modes"; auto ranks the
+    # feasible modes with roofline.select_moe_parallel's collective cost
+    # model per config x mesh and picks by predicted step time, breaking
+    # near-ties toward lower per-device live bytes)
+    moe_a2a_capacity: float = 2.0        # ep_a2a*: per-destination-rank slot
+    # capacity factor relative to the uniform share L*k/n_ranks; slots beyond
     # it are dropped and accounted in the a2a_overflow stat
+    moe_a2a_chunks: int = 1              # ep_a2a: split the exchange buffers
+    # into this many double-buffered chunks so chunk i's all_to_all overlaps
+    # chunk i-1's grouped GEMM; 1 = single exchange (no overlap)
     gmm_backend: str = "auto"            # grouped-GEMM backend: auto | ragged
     # | segment | pallas — the *config* slot of the resolution precedence
     # (call-site arg > use_backend scope > this > $REPRO_GMM_BACKEND > auto;

@@ -240,7 +240,7 @@ class CheckpointPlan:
     def fit(cls, cfg, n_tokens: int, hbm_budget: int, *, batch: int = 1,
             candidates: list["CheckpointPlan"] | None = None,
             prefer: "CheckpointPlan | None" = None, rank: str = "peak",
-            mode: str | None = None, n_model: int = 1,
+            mode: str | None = None, n_model: int = 1, n_node: int = 1,
             base: str = "train") -> "FitResult":
         """Budget-driven auto-selection.
 
@@ -249,7 +249,8 @@ class CheckpointPlan:
         the cheapest-*recompute* plan whose simulated per-device **peak**
         (transient spikes, a2a capacity buffers and optimizer state
         included — what actually OOMs) fits under ``hbm_budget`` bytes.
-        ``mode``/``n_model`` select the MoE distribution being simulated
+        ``mode``/``n_model``/``n_node`` select the MoE distribution being
+        simulated
         and ``base`` what sits under the activation timeline (see
         :func:`memsim.simulate`; the default ``"train"`` budgets the full
         train step: params + grads + AdamW m/v + activations).
@@ -278,7 +279,8 @@ class CheckpointPlan:
 
         def sim(p):
             return memsim.simulate(cfg, n_tokens, batch=batch, plan=p,
-                                   mode=mode, n_model=n_model, base=base)
+                                   mode=mode, n_model=n_model,
+                                   n_node=n_node, base=base)
 
         rows = [(p, sim(p)) for p in candidates]
         rows.sort(key=lambda pt: (pt[1].recompute_bytes, pt[1].peak_bytes))

@@ -72,7 +72,7 @@ class MemTimeline:
     phases: tuple[Phase, ...]
     base_bytes: int             # params (+grads, +opt state) per device
     base: str                   # "acts" | "grad" | "train"
-    mode: str                   # "single" | "ep" | "ep_a2a" | "tp"
+    mode: str             # "single" | "ep" | "ep_a2a" | "ep_a2a_hier" | "tp"
     n_model: int
     recompute_bytes: int        # total plan-driven recompute across bwd
 
@@ -141,15 +141,44 @@ def param_bytes(cfg, *, n_model: int = 1) -> int:
     return total
 
 
+def _a2a_capacity(cfg, slots: int, n: int, clamp: int | None = None) -> int:
+    """Per-destination slot capacity of one a2a hop over ``n`` ranks:
+    uniform share of ``slots`` scaled by ``cfg.moe_a2a_capacity``, clamped
+    (the traced path in ``models.moe_block`` delegates here)."""
+    n = max(n, 1)
+    uniform = (slots + n - 1) // n
+    cap = int(uniform * float(cfg.moe_a2a_capacity))
+    return max(min(cap, clamp if clamp is not None else slots), 1)
+
+
 def _a2a_rows(cfg, n_tokens: int, n_model: int) -> int:
-    """Total rows of the ep_a2a send/recv buffers on one device:
+    """Total rows of the flat ep_a2a send/recv buffers on one device:
     ``n_model * C`` with C the per-destination capacity (mirrors
-    ``models.moe_block._a2a_capacity`` on the L/n_model token chunk)."""
+    ``models.moe_block`` on the L/n_model token chunk).  With
+    ``cfg.moe_a2a_chunks > 1`` the capacity rounds up to a chunk multiple,
+    exactly as the chunked-overlap path pads it."""
     n = max(n_model, 1)
     chunk = max(n_tokens // n, 1)
-    uniform = (chunk * cfg.top_k + n - 1) // n
-    cap = int(uniform * float(cfg.moe_a2a_capacity))
-    return n * max(min(cap, chunk * cfg.top_k), 1)
+    c = _a2a_capacity(cfg, chunk * cfg.top_k, n)
+    ch = max(int(getattr(cfg, "moe_a2a_chunks", 1)), 1)
+    if ch > 1:
+        c = -(-c // ch) * ch
+    return n * c
+
+
+def _a2a_hier_rows(cfg, n_tokens: int, n_node: int, n_lane: int
+                   ) -> tuple[int, int]:
+    """(hop-1 rows, hop-2 rows) of the two-hop ``ep_a2a_hier`` buffers:
+    hop 1 groups this device's ``L/n`` chunk's slots by destination lane
+    over the ``n_lane`` intra-node ranks; hop 2 regroups the received rows
+    by destination node over ``n_node`` ranks."""
+    n = max(n_node, 1) * max(n_lane, 1)
+    chunk = max(n_tokens // n, 1)
+    slots = chunk * cfg.top_k
+    c1 = _a2a_capacity(cfg, slots, n_lane)
+    r1 = max(n_lane, 1) * c1
+    c2 = _a2a_capacity(cfg, slots, n_node, clamp=r1)
+    return r1, max(n_node, 1) * c2
 
 
 @dataclass(frozen=True)
@@ -173,11 +202,12 @@ class _KindSizes:
 
 
 def _kind_sizes(cfg, kind: str, n_tokens: int, batch: int,
-                mode: str, n_model: int) -> _KindSizes:
+                mode: str, n_model: int, n_node: int = 1) -> _KindSizes:
     it = _itemsize(cfg.dtype)
     d = cfg.d_model
     x_b = n_tokens * d * it
     seq = max(n_tokens // max(batch, 1), 1)
+    n_exp = max(n_model, 1) * max(n_node, 1)          # expert-parallel ways
     attn = ffn = moe_other = moe_vjp = moe_vjp_held = moe_x = ssm = 0
     collective = dots_extra = 0
     if "attn" in kind or kind == "hymba":
@@ -188,25 +218,42 @@ def _kind_sizes(cfg, kind: str, n_tokens: int, batch: int,
         dots_extra += scores
     if kind.endswith("moe"):
         E, k, ff = cfg.num_experts, cfg.top_k, cfg.moe_d_ff
-        E_loc = E // max(n_model, 1) if mode in ("ep", "ep_a2a") else E
-        if mode == "ep_a2a" and n_model > 1:
-            tm = max(n_tokens // n_model, 1)          # this device's chunk
-            rows = _a2a_rows(cfg, n_tokens, n_model)  # capacity-padded
+        E_loc = E // n_exp if mode in ("ep", "ep_a2a", "ep_a2a_hier") else E
+        if mode == "ep_a2a" and n_exp > 1:
+            tm = max(n_tokens // n_exp, 1)            # this device's chunk
+            rows = _a2a_rows(cfg, n_tokens, n_exp)    # capacity-padded
             rows_held = tm * k                        # rows actually routed
-            collective = 3 * rows * d * it            # send_x/recv_x/back
+            ch = max(int(getattr(cfg, "moe_a2a_chunks", 1)), 1)
+            if ch > 1:
+                # Double-buffered chunks: the full send buffer and the full
+                # return buffer stay live, but only two Cc-row exchange
+                # chunks (current + prefetched next) are in flight at once.
+                collective = (2 * rows + 2 * (rows // ch)) * d * it
+            else:
+                collective = 3 * rows * d * it        # send_x/recv_x/back
+        elif mode == "ep_a2a_hier" and n_exp > 1:
+            tm = max(n_tokens // n_exp, 1)
+            r1, r2 = _a2a_hier_rows(cfg, n_tokens, n_node, n_model)
+            rows = r2                                 # rows the GEMMs run on
+            rows_held = tm * k
+            # hop-1 send/recv + hop-2 send/recv + the return buffer of the
+            # hop live at the peak (the two inverse hops reuse the same
+            # footprint on the way back).
+            collective = (2 * r1 + 3 * r2) * d * it
         else:
             tm = n_tokens
             rows = rows_held = n_tokens * k           # full slot count
+        ff_loc = ff // max(n_model, 1) if mode == "tp" else ff
         moe_other = (tm * E * it                      # router logits
                      + 3 * rows * 4                   # eti/tim/dest indices
                      + 2 * rows * d * it              # x_g, y_g
                      + x_b)                           # combined output y
-        moe_vjp = 3 * rows * ff * it                  # a, b, y_swi
-        moe_vjp_held = 3 * rows_held * ff * it
+        moe_vjp = 3 * rows * ff_loc * it              # a, b, y_swi
+        moe_vjp_held = 3 * rows_held * ff_loc * it
         moe_x = tm * d * it
         # The segment grouped-GEMM backend's per-expert full-slot dots —
         # what ``dots`` ends up saving on MoE layers (see bench data).
-        dots_extra += E_loc * (2 * rows * ff + rows * d) * it
+        dots_extra += E_loc * (2 * rows * ff_loc + rows * d) * it
     elif "attn" in kind or kind == "hymba":
         n_ffn = 3 if cfg.ffn_act == "swiglu" else 2
         ffn = n_ffn * n_tokens * cfg.d_ff * it + x_b
@@ -216,6 +263,14 @@ def _kind_sizes(cfg, kind: str, n_tokens: int, batch: int,
                       moe_vjp=moe_vjp, moe_vjp_held=moe_vjp_held,
                       moe_x=moe_x, ssm=ssm, collective=collective,
                       dots_extra=dots_extra)
+
+
+def moe_layer_sizes(cfg, n_tokens: int, *, mode: str, n_model: int = 1,
+                    n_node: int = 1) -> _KindSizes:
+    """Forward working-set components of ONE MoE layer under ``mode`` —
+    the per-device live-bytes half of ``roofline.select_moe_parallel``'s
+    ranking (the simulator stays the single source of buffer arithmetic)."""
+    return _kind_sizes(cfg, "moe", n_tokens, 1, mode, n_model, n_node)
 
 
 def _held_bytes(plan, kind: str, sizes: _KindSizes, tag_sizes: dict,
@@ -268,16 +323,18 @@ def _vjp_mode(plan, save_yswi: bool = True) -> str:
 
 
 def simulate(cfg, n_tokens: int, *, batch: int = 1, plan=None,
-             mode: str | None = None, n_model: int = 1,
+             mode: str | None = None, n_model: int = 1, n_node: int = 1,
              base: str = "grad") -> MemTimeline:
     """Simulate one train step's per-device memory timeline.
 
     ``n_tokens`` / ``batch`` are the *per-device* token and sequence counts
     (the caller divides the global batch by its data-parallel shards and
     microbatches, exactly as :func:`train.loop.make_train_step` does for the
-    residual estimate).  ``mode`` / ``n_model`` pick the MoE distribution
-    (``single`` | ``ep`` | ``ep_a2a`` | ``tp``); ``base`` selects what
-    constant state sits under the activation timeline:
+    residual estimate).  ``mode`` / ``n_model`` / ``n_node`` pick the MoE
+    distribution (``single`` | ``ep`` | ``ep_a2a`` | ``ep_a2a_hier`` |
+    ``tp``; ``n_node`` is the factored cross-node tier of a node mesh, 1
+    when absent); ``base`` selects what constant state sits under the
+    activation timeline:
 
     * ``"acts"``  — activations only (plan comparisons in isolation);
     * ``"grad"``  — params + grads + batch: matches what
@@ -293,10 +350,11 @@ def simulate(cfg, n_tokens: int, *, batch: int = 1, plan=None,
     else:
         plan = CK.resolve_plan(plan, config=cfg.remat_policy).plan
     if mode is None:
-        mode = "single" if n_model <= 1 else (
-            cfg.moe_parallel if cfg.moe_parallel in ("ep", "ep_a2a", "tp")
+        mode = "single" if n_model * n_node <= 1 else (
+            cfg.moe_parallel
+            if cfg.moe_parallel in ("ep", "ep_a2a", "ep_a2a_hier", "tp")
             else "ep")
-    if mode not in ("single", "ep", "ep_a2a", "tp"):
+    if mode not in ("single", "ep", "ep_a2a", "ep_a2a_hier", "tp"):
         raise ValueError(f"unknown moe-parallel mode {mode!r}")
 
     it = _itemsize(cfg.dtype)
@@ -305,7 +363,8 @@ def simulate(cfg, n_tokens: int, *, batch: int = 1, plan=None,
     kinds = _layer_kinds(cfg)
     tag_by_kind = {k: s for k, s in
                    CK.tag_bytes_by_kind(cfg, n_tokens, batch=batch)}
-    sizes_of = {k: _kind_sizes(cfg, k, n_tokens, batch, mode, n_model)
+    sizes_of = {k: _kind_sizes(cfg, k, n_tokens, batch, mode, n_model,
+                               n_node)
                 for k in set(kinds)}
     wrapped = plan.special != "full"
     vjp_mode = _vjp_mode(plan, cfg.save_yswi)
@@ -348,7 +407,12 @@ def simulate(cfg, n_tokens: int, *, batch: int = 1, plan=None,
             transient_bytes=spikes[i],
             collective_bytes=s.collective))
 
-    pb = param_bytes(cfg, n_model=n_model)
+    # Expert weights per device: ep modes shard the expert dim over the
+    # combined node x model axes; tp shards the per-expert hidden dim over
+    # 'model' — either way the bank divides by that many ways.
+    ep_ways = (n_model * n_node
+               if mode in ("ep", "ep_a2a", "ep_a2a_hier") else n_model)
+    pb = param_bytes(cfg, n_model=max(ep_ways, 1))
     n_params = pb // _itemsize(cfg.param_dtype)
     grads_b = n_params * 4
     tok_b = 2 * n_tokens * 4
@@ -456,7 +520,7 @@ def simulate_serve(cfg, *, batch_slots: int, num_pages: int, page_size: int,
 
 def simulate_peak(cfg, n_tokens: int, *, batch: int = 1, plan=None,
                   mode: str | None = None, n_model: int = 1,
-                  base: str = "grad") -> int:
+                  n_node: int = 1, base: str = "grad") -> int:
     """Peak bytes of :func:`simulate` (the fit/bench/step-hook scalar)."""
     return simulate(cfg, n_tokens, batch=batch, plan=plan, mode=mode,
-                    n_model=n_model, base=base).peak_bytes
+                    n_model=n_model, n_node=n_node, base=base).peak_bytes

@@ -234,14 +234,25 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             else _num_microbatches(ishape, mesh, cfg0)
         b_dev = max(b_dev // M, 1)
     n_model = max(mesh.shape.get("model", 1), 1)
+    n_node = max(mesh.shape.get("node", 1), 1)
     moe_mode = None
     if cfg0.is_moe:
-        from repro.models.moe_block import resolve_moe_parallel
-        moe_mode = resolve_moe_parallel(cfg0, mesh)
+        from repro.models.moe_block import resolve_moe_parallel_ex
+        decision = resolve_moe_parallel_ex(cfg0, mesh,
+                                           b_dev * ishape.seq_len)
+        moe_mode = decision.mode
+        # The full predicted-cost decision table (mirrors remat_fit): one
+        # row per distribution mode with roofline time terms, bytes on the
+        # wire, live bytes and the chosen flag — the auto optimizer's
+        # provenance, stamped even when the mode was forced.
+        rec["moe_parallel"] = decision.mode
+        rec["moe_parallel_source"] = decision.source
+        rec["moe_parallel_tokens"] = decision.n_tokens
+        rec["moe_parallel_decision"] = decision.table_rows()
     if hbm_budget is not None:
         fit = CK.CheckpointPlan.fit(
             cfg0, b_dev * ishape.seq_len, hbm_budget, batch=b_dev,
-            prefer=prefer, mode=moe_mode, n_model=n_model)
+            prefer=prefer, mode=moe_mode, n_model=n_model, n_node=n_node)
         plan_r = fit.resolved
         rec["remat_fit"] = [dict(dataclasses.asdict(r), source="fit")
                             for r in fit.table]
@@ -252,7 +263,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         plan_r = CK.resolve_plan(remat_policy, config=cfg0.remat_policy)
         timeline = memsim.simulate(
             cfg0, b_dev * ishape.seq_len, batch=b_dev, plan=plan_r.plan,
-            mode=moe_mode, n_model=n_model, base="train")
+            mode=moe_mode, n_model=n_model, n_node=n_node, base="train")
         # No budget: stamp the decision table anyway (one source=explicit /
         # source=config / source=default row for the resolved plan) so CI
         # assertions over remat_fit never vacuously pass on a missing key.
@@ -345,6 +356,28 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             rec["flops_per_dev"] * mesh.devices.size, 1.0)
         rec["cost_probe"] = "extrapolated(1,2 groups unrolled)"
 
+    if verbose and rec.get("moe_parallel_decision"):
+        # Predicted-vs-measured: the cost model's per-mode ranking next to
+        # what the compiled HLO actually put on the wire.
+        print(f"  moe_parallel={rec['moe_parallel']} "
+              f"(source={rec['moe_parallel_source']}, "
+              f"ranked at {rec['moe_parallel_tokens']} tokens/dev):")
+        for r in rec["moe_parallel_decision"]:
+            mark = "*" if r["chosen"] else " "
+            why = "" if r["feasible"] else f"  [{r['why']}]"
+            print(f"  {mark} {r['mode']:<12}"
+                  f" t={r['t_total_s'] * 1e6:9.1f}us"
+                  f" (comp {r['t_compute_s'] * 1e6:.1f}"
+                  f" mem {r['t_memory_s'] * 1e6:.1f}"
+                  f" coll {r['t_collective_s'] * 1e6:.1f})"
+                  f" live={r['live_bytes'] / 2**20:8.1f}MiB"
+                  f" a2a={r['a2a_bytes'] / 2**20:.2f}MiB"
+                  f" psum={r['psum_bytes'] / 2**20:.2f}MiB{why}")
+        by_kind = rec.get("collective_bytes_by_kind")
+        if by_kind:
+            kinds = " ".join(f"{k}={v / 2**20:.1f}MiB"
+                             for k, v in sorted(by_kind.items()))
+            print(f"    measured (compiled HLO, whole step): {kinds}")
     if verbose:
         print(f"[{arch} x {shape_name} x {rec['mesh']}] "
               f"plan={rec['remat_plan']} "
@@ -377,7 +410,7 @@ def main(argv=None):
                     help="grouped-GEMM backend for MoE lowerings "
                          "(ragged | segment | pallas; default auto)")
     ap.add_argument("--moe-parallel", default=None,
-                    choices=["auto", "ep", "ep_a2a", "tp"],
+                    choices=["auto", "ep", "ep_a2a", "ep_a2a_hier", "tp"],
                     help="MoE distribution mode override (config field "
                          "moe_parallel; see README 'Distribution modes')")
     ap.add_argument("--remat-policy", default=None,

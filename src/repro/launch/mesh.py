@@ -17,8 +17,28 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return make_mesh((data, model), ("data", "model"))
 
 
+def make_node_mesh(data: int = 1, node: int = 1, model: int = 1):
+    """Debug mesh with a factored expert axis: ('data', 'node', 'model').
+
+    The 'node' axis declares the slow (cross-node / DCN) tier of the
+    bandwidth hierarchy; 'model' stays the fast intra-node (ICI/NVLink)
+    tier.  Expert-parallel modes shard experts over the combined
+    ``node x model`` axes, and ``moe_parallel='ep_a2a_hier'`` runs its
+    intra-node hop over 'model' and its single cross-node hop over 'node'.
+    """
+    return make_mesh((data, node, model), ("data", "node", "model"))
+
+
 # TPU v5e hardware constants used by the roofline analysis (per chip).
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s
 ICI_BW_PER_LINK = 50e9            # B/s  (~ per link)
+DCN_BW = 12.5e9                   # B/s  cross-node (per-host data-center NIC)
 HBM_BYTES = 16 * 1024 ** 3        # 16 GiB per chip
+
+
+def axis_bandwidth(axis: str) -> float:
+    """Bytes/s the collective cost model charges for traffic over ``axis``:
+    'node'/'pod' cross the data-center network, everything else rides the
+    intra-node interconnect."""
+    return DCN_BW if axis in ("node", "pod") else ICI_BW_PER_LINK

@@ -117,15 +117,18 @@ class ServeEngine:
             CK.moe_residual_mode(self.cfg)
         # Validate the MoE distribution mode for this (cfg, mesh) pairing at
         # construction — decode steps run it via shard_map when a mesh is
-        # given, and a bad pairing must not surface mid-generate.  ep_a2a is
-        # degenerate for decode (single-token slabs rarely divide the model
-        # axis, and there is nothing to exchange at S=1), so it falls back to
-        # plain EP: numerically identical, same expert-sharded weight layout.
+        # given, and a bad pairing must not surface mid-generate.  The token
+        # exchanges are degenerate for decode (single-token slabs rarely
+        # divide the expert axes, and there is nothing to exchange at S=1),
+        # so an explicit ep_a2a / ep_a2a_hier falls back to plain EP:
+        # numerically identical, same expert-sharded weight layout.  'auto'
+        # stays 'auto' — the cost model resolves it per decode slab, and its
+        # live-bytes tie-break lands on EP for decode-sized token counts.
         if cfg.is_moe:
             from repro.models.moe_block import resolve_moe_parallel
-            mode = resolve_moe_parallel(self.cfg, mesh)
-            if mode == "ep_a2a":
+            if self.cfg.moe_parallel in ("ep_a2a", "ep_a2a_hier"):
                 self.cfg = self.cfg.replace(moe_parallel="ep")
+            resolve_moe_parallel(self.cfg, mesh)
         self.mesh = mesh
         self.params = params
         self.slots = batch_slots

@@ -3,10 +3,12 @@
 Strategy (DESIGN.md §5, README "Distribution modes"):
   * params: FSDP x TP — input-side matrices P('data', 'model'), output-side
     (projections back to d_model) P('model', 'data'); MoE expert tensors
-    shard the *expert* dim over 'model' under expert parallelism
-    (``moe_parallel`` 'ep'/'ep_a2a', or 'auto' when the expert count divides
-    the axis) and otherwise tensor-shard the per-expert hidden dim on
-    'model' (matching the shard_map specs in models/moe_block.py).
+    shard the *expert* dim over the expert axes — 'model', or the factored
+    ('node', 'model') pair when the mesh declares a node tier — under expert
+    parallelism (``moe_parallel`` 'ep'/'ep_a2a'/'ep_a2a_hier', or 'auto'
+    when the expert count divides the axes) and otherwise tensor-shard the
+    per-expert hidden dim on 'model' (matching the shard_map specs in
+    models/moe_block.py).
   * every rule checks divisibility and falls back to replication for that dim
     (never uneven padding) — e.g. hubert's vocab=504 vs a 16-way axis.
   * activations/batches: batch on ('pod','data'); decode caches shard batch
@@ -58,14 +60,18 @@ def _leaf_spec(path_keys: list[str], shape: tuple, mesh,
         return prefix + (_fit(in_dim, mesh, in_ax), _fit(out_dim, mesh, out_ax))
 
     if len(dims) == 3 and name in (_MOE_IN | _MOE_OUT):
-        # Expert-parallel when the expert count divides the model axis
+        # Expert-parallel when the expert count divides the expert axes
         # (qwen3-moe: 8 experts/device, no weight gather in the MoE body);
         # tensor-parallel on the expert hidden dim otherwise (mixtral).
-        # 'ep_a2a' keeps the EP weight layout — only token placement differs.
-        ep = _fit(dims[0], mesh, "model") if moe_parallel == "auto" \
-            else (moe_parallel in ("ep", "ep_a2a"))
+        # The a2a modes keep the EP weight layout — only token placement
+        # differs.  A mesh with a 'node' tier factors the expert dim over
+        # ('node', 'model'): node-major blocks, matching the flattened
+        # device index node_i * n_model + lane_i in moe_block.
+        ep_ax = ("node", "model") if "node" in mesh.axis_names else "model"
+        ep = _fit(dims[0], mesh, ep_ax) if moe_parallel == "auto" \
+            else (moe_parallel in ("ep", "ep_a2a", "ep_a2a_hier"))
         if ep:
-            return prefix + ("model", _fit(dims[1], mesh, "data"), None)
+            return prefix + (ep_ax, _fit(dims[1], mesh, "data"), None)
         if name in _MOE_IN:                          # (E, d, h)
             return prefix + (None, _fit(dims[1], mesh, "data"),
                              _fit(dims[2], mesh, "model"))

@@ -75,23 +75,27 @@ def make_train_step(cfg, tcfg, *, mesh=None, backend=None,
     (gradient accumulation — bounds activation memory to one microbatch)."""
     resolved = GB.resolve(backend, config=_config_backend(cfg, tcfg))
     n_model = 1 if mesh is None else max(mesh.shape.get("model", 1), 1)
+    n_node = 1 if mesh is None else max(mesh.shape.get("node", 1), 1)
+    b_live = max(tcfg.batch_size // max(tcfg.num_microbatches, 1)
+                 // _dp_shards(mesh), 1)
     moe_mode = None
     if cfg.is_moe:
         # Fail at construction, not at trace time inside shard_map: an
         # invalid (moe_parallel, mesh) pairing — e.g. forced 'ep' with
-        # E % n_model != 0 — raises here with a clear message.  The resolved
-        # mode also feeds the budget fit / peak simulation below (a2a
-        # capacity buffers only exist under ep_a2a).
+        # E % n_model != 0 — raises here with a clear message.  'auto'
+        # resolves through the roofline cost model at the live per-shard
+        # token count, so this resolution matches what moe_sublayer traces.
+        # The resolved mode also feeds the budget fit / peak simulation
+        # below (a2a capacity buffers only exist under the a2a modes).
         from repro.models.moe_block import resolve_moe_parallel
-        moe_mode = resolve_moe_parallel(cfg, mesh)
+        moe_mode = resolve_moe_parallel(cfg, mesh, b_live * tcfg.seq_len)
     if hbm_budget is not None:
         prefer = CK.get_plan(remat_policy) if remat_policy is not None \
             else None
-        b_live = max(tcfg.batch_size // max(tcfg.num_microbatches, 1)
-                     // _dp_shards(mesh), 1)
         resolved_plan = CK.CheckpointPlan.fit(
             cfg, b_live * tcfg.seq_len, hbm_budget, batch=b_live,
-            prefer=prefer, mode=moe_mode, n_model=n_model).resolved
+            prefer=prefer, mode=moe_mode, n_model=n_model,
+            n_node=n_node).resolved
     else:
         resolved_plan = CK.resolve_plan(remat_policy,
                                         config=cfg.remat_policy)
@@ -150,15 +154,16 @@ def _sim_peak(cfg, tcfg, mesh, plan) -> int:
     the activation timeline) at the live set of one microbatch on one
     data-parallel shard — the same accounting slot the budget fit uses."""
     n_model = 1 if mesh is None else max(mesh.shape.get("model", 1), 1)
+    n_node = 1 if mesh is None else max(mesh.shape.get("node", 1), 1)
+    b = max(tcfg.batch_size // max(tcfg.num_microbatches, 1)
+            // _dp_shards(mesh), 1)
     moe_mode = None
     if cfg.is_moe:
         from repro.models.moe_block import resolve_moe_parallel
-        moe_mode = resolve_moe_parallel(cfg, mesh)
-    b = max(tcfg.batch_size // max(tcfg.num_microbatches, 1)
-            // _dp_shards(mesh), 1)
+        moe_mode = resolve_moe_parallel(cfg, mesh, b * tcfg.seq_len)
     return memsim.simulate_peak(cfg, b * tcfg.seq_len, batch=b, plan=plan,
                                 mode=moe_mode, n_model=n_model,
-                                base="train")
+                                n_node=n_node, base="train")
 
 
 def compiled_step_memory(cfg, tcfg, *, mesh=None, backend=None) -> dict:

@@ -138,6 +138,57 @@ def test_a2a_buffers_only_under_ep_a2a():
     assert all(p.collective_bytes == 0 for p in tl_d.phases)
 
 
+def test_chunked_a2a_peak_monotone():
+    """Double-buffered chunking never raises the simulated peak when the
+    capacity divides the chunk count: the full send/return buffers stay
+    live but only two chunk-sized exchange buffers are in flight, so the
+    chunked peak is <= the unchunked one (strictly < once chunks > 2)."""
+    plan = get_plan("paper")
+    un = memsim.simulate(MOE, N, batch=2, plan=plan, mode="ep_a2a",
+                         n_model=2)
+    rows = memsim._a2a_rows(MOE, N, 2)
+    for ch in (2, 4):
+        cfg = MOE.replace(moe_a2a_chunks=ch)
+        tl = memsim.simulate(cfg, N, batch=2, plan=plan, mode="ep_a2a",
+                             n_model=2)
+        assert tl.peak_bytes <= un.peak_bytes, ch
+        want = (2 * rows + 2 * (rows // ch)) * MOE.d_model * 4
+        moe_phases = [p for p in tl.phases if "moe" in p.name]
+        assert all(p.collective_bytes == want for p in moe_phases), ch
+    four = memsim.simulate(MOE.replace(moe_a2a_chunks=4), N, batch=2,
+                           plan=plan, mode="ep_a2a", n_model=2)
+    assert four.peak_bytes < un.peak_bytes
+
+
+def test_hier_buffers_accounted():
+    """``ep_a2a_hier`` phases carry the two-hop buffer set — hop-1 rows live
+    twice (send + the recv that hop 2 reads from) plus hop-2
+    send/recv/return — and hop-2 capacity clamps to the hop-1 row count."""
+    plan = get_plan("paper")
+    r1, r2 = memsim._a2a_hier_rows(MOE, N, 2, 2)
+    assert r2 <= r1 * 2                     # C2 clamped to R1 rows per dest
+    tl = memsim.simulate(MOE, N, batch=2, plan=plan, mode="ep_a2a_hier",
+                         n_model=2, n_node=2)
+    moe_phases = [p for p in tl.phases if "moe" in p.name]
+    assert moe_phases
+    want = (2 * r1 + 3 * r2) * MOE.d_model * 4
+    assert all(p.collective_bytes == want for p in moe_phases)
+    assert all(p.collective_bytes == 0 for p in tl.phases
+               if "moe" not in p.name)
+
+
+def test_n_node_divides_expert_params():
+    """On a node mesh the expert banks shard over n_node * n_model ways —
+    the simulated param base under ep modes shrinks accordingly."""
+    flat = memsim.simulate(MOE, N, batch=2, mode="ep", n_model=2)
+    node = memsim.simulate(MOE, N, batch=2, mode="ep", n_model=2, n_node=2)
+    assert node.base_bytes < flat.base_bytes
+    # tp ignores the node tier: node ranks hold identical replicas
+    tp_f = memsim.simulate(MOE, N, batch=2, mode="tp", n_model=2)
+    tp_n = memsim.simulate(MOE, N, batch=2, mode="tp", n_model=2, n_node=2)
+    assert tp_f.base_bytes == tp_n.base_bytes
+
+
 # ---------------------------------------------------------------------------
 # fit: simulator vs residual accountant
 # ---------------------------------------------------------------------------

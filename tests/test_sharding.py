@@ -15,7 +15,7 @@ from repro.configs import get_config
 from repro.configs.base import InputShape, TrainConfig
 from repro.core import gmm_backend as GB
 from repro.launch import specs as S
-from repro.launch.mesh import make_debug_mesh
+from repro.launch.mesh import make_debug_mesh, make_node_mesh
 from repro.models import transformer as T
 from repro.models.moe_block import (init_moe_params, moe_sublayer,
                                     resolve_moe_parallel)
@@ -280,6 +280,158 @@ def test_decode_cache_specs_long_context():
         cspecs, is_leaf=lambda x: isinstance(x, P))[0]
     flat = [ax for ax in kv_spec if ax]
     assert flat, "expected some sharded axis on the KV cache"
+
+
+# -- hierarchical two-hop exchange on node meshes ----------------------------
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("backend", _backend_params())
+def test_moe_hier_parity_matrix(backend, dtype):
+    """The two-hop ep_a2a_hier path on a ('data','node','model') mesh matches
+    the unsharded oracle forward AND backward, under every available
+    grouped-GEMM backend at f32 and bf16."""
+    mesh = make_node_mesh(2, 2, 2)
+    cfg, p, x = _matrix_case(dtype, backend, "ep_a2a_hier")
+    tol = _TOL[dtype]
+
+    y_ref, _ = moe_sublayer(x, p, cfg.replace(moe_parallel="auto"), mesh=None)
+    with mesh:
+        y, _ = jax.jit(lambda x, p: moe_sublayer(
+            x, p, cfg, mesh=mesh, dp_axes=("data",)))(x, p)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol,
+                               err_msg=f"fwd hier/{backend}/{dtype}")
+
+    g_ref = jax.grad(_y_loss(cfg.replace(moe_parallel="auto"), None),
+                     argnums=(0, 1))(x, p)
+    with mesh:
+        g = jax.jit(jax.grad(_y_loss(cfg, mesh), argnums=(0, 1)))(x, p)
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(g), jax.tree.leaves(g_ref))):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), **tol,
+            err_msg=f"grad leaf {i} (hier/{backend}/{dtype})")
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("backend", _backend_params())
+def test_moe_chunked_a2a_parity(backend, dtype):
+    """Double-buffered chunked ep_a2a (moe_a2a_chunks=2, chunk i's exchange
+    overlapping chunk i-1's grouped GEMM) is numerically the same layer."""
+    mesh = make_debug_mesh(2, 4)
+    cfg, p, x = _matrix_case(dtype, backend, "ep_a2a")
+    cfg = cfg.replace(moe_a2a_chunks=2)
+    tol = _TOL[dtype]
+
+    y_ref, _ = moe_sublayer(x, p, cfg.replace(moe_parallel="auto"), mesh=None)
+    with mesh:
+        y, _ = jax.jit(lambda x, p: moe_sublayer(
+            x, p, cfg, mesh=mesh, dp_axes=("data",)))(x, p)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol,
+                               err_msg=f"fwd chunked/{backend}/{dtype}")
+
+    g_ref = jax.grad(_y_loss(cfg.replace(moe_parallel="auto"), None),
+                     argnums=(0, 1))(x, p)
+    with mesh:
+        g = jax.jit(jax.grad(_y_loss(cfg, mesh), argnums=(0, 1)))(x, p)
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(g), jax.tree.leaves(g_ref))):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), **tol,
+            err_msg=f"grad leaf {i} (chunked/{backend}/{dtype})")
+
+
+def test_hier_overflow_accounted():
+    """Two-hop capacity drops (either hop) surface in the a2a_overflow stat;
+    ample capacity reports exactly 0."""
+    mesh = make_node_mesh(2, 2, 2)
+    cfg, p, x = _matrix_case("float32", "segment", "ep_a2a_hier")
+    with mesh:
+        _, _, ample = jax.jit(lambda x, p: moe_sublayer(
+            x, p, cfg, mesh=mesh, dp_axes=("data",), with_stats=True))(x, p)
+        tight_cfg = cfg.replace(moe_a2a_capacity=0.25)
+        _, _, tight = jax.jit(lambda x, p: moe_sublayer(
+            x, p, tight_cfg, mesh=mesh, dp_axes=("data",),
+            with_stats=True))(x, p)
+    assert float(ample["a2a_overflow"]) == 0.0
+    assert float(tight["a2a_overflow"]) > 0.0
+
+
+def test_hier_indivisible_tokens_raises():
+    mesh = make_node_mesh(2, 2, 2)
+    cfg, p, _ = _matrix_case("float32", "segment", "ep_a2a_hier")
+    x = jnp.zeros((4, 15, cfg.d_model))      # 30 tokens/device % 4 != 0
+    with pytest.raises(ValueError, match="tokens/device"):
+        moe_sublayer(x, p, cfg, mesh=mesh, dp_axes=("data",))
+
+
+def test_node_mesh_mode_validation_raises_at_resolve():
+    """Bad mode x mesh factorizations fail at resolve_moe_parallel, never
+    mid-trace: flat ep_a2a on a node mesh, hier on a flat mesh, expert count
+    not divisible by the combined (node x model) axes."""
+    node = make_node_mesh(2, 2, 2)
+    flat = make_debug_mesh(2, 4)
+    with pytest.raises(ValueError, match="'node' axis"):
+        resolve_moe_parallel(MOE_CFG.replace(moe_parallel="ep_a2a"), node)
+    with pytest.raises(ValueError, match="'node' axis"):
+        resolve_moe_parallel(
+            MOE_CFG.replace(moe_parallel="ep_a2a_hier"), flat)
+    with pytest.raises(ValueError, match="divisible"):
+        resolve_moe_parallel(
+            MOE_CFG.replace(num_experts=6, moe_parallel="ep_a2a_hier"), node)
+
+
+def test_param_specs_node_axis_expert_dim():
+    """A mesh with a 'node' tier factors the expert-bank dim over
+    ('node', 'model') — matching the gdev = node_i * n_model + lane_i
+    flattening in the hier body."""
+    mesh = make_node_mesh(2, 2, 2)
+    pspecs = shd.param_specs(S.params_shapes(MOE_CFG), mesh)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        pspecs, is_leaf=lambda s: isinstance(s, P))
+    moe_specs = [s for path, s in flat
+                 if any(str(getattr(k, "key", "")) in ("w1", "w2", "w3")
+                        for k in path)]
+    assert moe_specs, "no MoE expert leaves found in param specs"
+    for s in moe_specs:
+        assert ("node", "model") in tuple(s), s
+
+
+def test_auto_resolution_follows_cost_model():
+    """`auto` is an optimizer, not an alias: on the same 8-device mesh it
+    picks ep_a2a where the collective cost model predicts the exchange wins
+    (h ~ 3d, tight capacity) and ep where it predicts it loses (h ~ d,
+    capacity 2 doubles the wire bytes)."""
+    mesh = make_debug_mesh(2, 4)
+    wins = MOE_CFG.replace(num_experts=8, moe_d_ff=198,
+                           moe_a2a_capacity=1.0)
+    assert resolve_moe_parallel(wins, mesh, 1024) == "ep_a2a"
+    loses = MOE_CFG.replace(num_experts=8, moe_d_ff=66,
+                            moe_a2a_capacity=2.0)
+    assert resolve_moe_parallel(loses, mesh, 1024) == "ep"
+    # provenance mirrors ResolvedBackend: auto decisions carry the table
+    from repro.models.moe_block import resolve_moe_parallel_ex
+    dec = resolve_moe_parallel_ex(wins, mesh, 1024)
+    assert dec.source == "auto" and len(dec.table) >= 3
+
+
+def test_auto_resolves_hier_on_node_mesh():
+    """On a node mesh where tp is infeasible (odd h) and the model predicts
+    the two-hop exchange beats replicated EP, auto lands on ep_a2a_hier —
+    and the resulting layer runs."""
+    mesh = make_node_mesh(2, 2, 2)
+    cfg = MOE_CFG.replace(num_experts=8, moe_d_ff=389, moe_a2a_capacity=1.0)
+    n_tok = 4 * 16 // 2
+    assert resolve_moe_parallel(cfg, mesh, n_tok * 2) == "ep_a2a_hier"
+    p = init_moe_params(jax.random.PRNGKey(3), cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 16, cfg.d_model))
+    y_ref, _ = moe_sublayer(x, p, cfg.replace(moe_a2a_capacity=8.0),
+                            mesh=None)
+    with mesh:
+        y, _ = jax.jit(lambda x, p: moe_sublayer(
+            x, p, cfg.replace(moe_a2a_capacity=8.0), mesh=mesh,
+            dp_axes=("data",)))(x, p)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5)
 
 
 def test_dryrun_small_mesh_end_to_end():
