@@ -157,8 +157,10 @@ def main(argv: list[str] | None = None) -> int:
 
     # Serving same-run gates: batched-vs-solo token parity (the left-pad
     # bugfix), decode slot-steps == sum(T_r - 1) (continuous slot release),
-    # and the int8 paged pool's measured bytes-per-token advantage over
-    # dense bf16 slots — all pairings within THIS run's record.
+    # the int8 paged pool's measured bytes-per-token advantage over dense
+    # bf16 slots, the shared-prefix pair's prefill-token saving (>= one
+    # full page vs 2x solo, tokens unchanged), and async-pipeline ==
+    # sync-engine token identity — all pairings within THIS run's record.
     from repro.bench.serving import serving_gate_failures
     for rec in records:
         if rec["suite"] != "serving":
@@ -169,6 +171,8 @@ def main(argv: list[str] | None = None) -> int:
             print(line)
         if not fails:
             print("OK: batched==solo tokens, slots released on finish, "
-                  "int8 paged KV >= 1.8x smaller than dense bf16 slots")
+                  "int8 paged KV >= 1.8x smaller than dense bf16 slots, "
+                  "prefix pair >= 1 page cheaper than 2x solo, "
+                  "async pipeline == sync engine")
         ok = ok and not fails
     return 0 if ok else 1

@@ -15,6 +15,16 @@ Three entry families on the bench MoE config:
   the actual pytrees): the int8 paged pool vs the seed's dense bf16 slot
   cache, per cached token.  The same-run gate requires >= 1.8x fewer bytes
   per token, and throughput (tokens/s) rides along informationally.
+* ``serving/prefix/*`` — copy-on-write prefix sharing: a page-aligned
+  same-prompt pair through a ``prefix_cache=True`` engine vs the
+  no-sharing cost.  The same-run gate requires the pair's measured
+  ``prefill_tokens`` to undercut 2x solo by AT LEAST one full page, with
+  exact token parity against the solo run (sharing may not change tokens).
+* ``serving/pipeline/*`` — the async three-stage runtime
+  (``serve.runtime.AsyncServeRuntime``) vs the synchronous engine on the
+  same requests: token mismatches (same-run gate: MUST be zero — the
+  pipelined scheduler is token-identical under a fixed seed) plus
+  pipelined throughput informationally.
 
 The deterministic entries (byte counts, scheduler counts, parity) are
 baseline-gated at 0% tolerance; wall-clock entries are informational (CI
@@ -36,6 +46,7 @@ from repro.core import memsim
 from repro.models import transformer as T
 from repro.serve import kv_quant as KQ
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.runtime import AsyncServeRuntime
 
 #: required measured-bytes advantage of the int8 paged pool over bf16 dense
 #: slots, per cached token (the acceptance bar's number).
@@ -113,6 +124,57 @@ def serving_suite(*, small: bool = False) -> list:
         cfg, batch_slots=_SLOTS, num_pages=num_pages, page_size=_PAGE_SIZE,
         prefill_tokens=max(p.size for p in prompts), quantized=False)
 
+    # -- prefix sharing: page-aligned pair vs no-sharing ---------------------
+    # One prompt of exactly two full pages, served twice through a
+    # prefix_cache engine (batch_slots=1 so the first finishes — and
+    # donates its pages — before the second is admitted).  The second
+    # request maps both pages read-only and re-feeds only its last prompt
+    # token into a COW fork, so the pair's prefill_tokens undercuts 2x the
+    # solo cost by a page-and-change.
+    prng = np.random.default_rng(1)
+    shared_prompt = prng.integers(1, cfg.vocab_size,
+                                  size=2 * _PAGE_SIZE).astype(np.int32)
+    solo_pre = ServeEngine(cfg, params, batch_slots=1, capacity=_CAPACITY,
+                           page_size=_PAGE_SIZE)
+    solo_req = solo_pre.generate(
+        _requests([shared_prompt], cfg, max_new))[0]
+    nosharing_pt = 2 * solo_pre.stats["prefill_tokens"]
+    pre_eng = ServeEngine(cfg, params, batch_slots=1, capacity=_CAPACITY,
+                          page_size=_PAGE_SIZE, prefix_cache=True)
+    pre_reqs = _requests([shared_prompt, shared_prompt], cfg, max_new)
+    for r in pre_reqs:
+        pre_eng.enqueue(r)
+    pre_eng.run()
+    pst = pre_eng.stats
+    prefix_mismatches = 0
+    for r in pre_reqs:
+        prefix_mismatches += sum(a != b for a, b in
+                                 zip(r.out_tokens, solo_req.out_tokens))
+        prefix_mismatches += abs(len(r.out_tokens)
+                                 - len(solo_req.out_tokens))
+    sim_noshare = memsim.simulate_serve(
+        cfg, batch_slots=_SLOTS, num_pages=num_pages, page_size=_PAGE_SIZE,
+        prefill_tokens=2 * _PAGE_SIZE, quantized=False)
+    sim_shared = memsim.simulate_serve(
+        cfg, batch_slots=_SLOTS, num_pages=num_pages, page_size=_PAGE_SIZE,
+        prefill_tokens=2 * _PAGE_SIZE, shared_pages=2, quantized=False)
+
+    # -- pipelined async runtime vs the synchronous engine -------------------
+    async_eng = _engine(cfg, params)
+    a_reqs = _requests(prompts, cfg, max_new)
+    t0 = time.perf_counter()
+    with AsyncServeRuntime(async_eng, queue_depth=2,
+                           transfer_buffers=2) as rt:
+        rt.run(a_reqs)
+    async_s = time.perf_counter() - t0
+    async_gen = sum(len(r.out_tokens) for r in a_reqs)
+    async_mismatches = 0
+    for sync_r, async_r in zip(b_reqs, a_reqs):
+        async_mismatches += sum(a != b for a, b in
+                                zip(sync_r.out_tokens, async_r.out_tokens))
+        async_mismatches += abs(len(sync_r.out_tokens)
+                                - len(async_r.out_tokens))
+
     det = dict(kind="serving", tolerance_pct=0.0)
     info = dict(kind="serving", tolerance_pct=None)
     return [
@@ -141,6 +203,28 @@ def serving_suite(*, small: bool = False) -> list:
         entry("serving/throughput/int8_tokens_per_s",
               int8_gen / max(int8_s, 1e-9), unit="tokens/s",
               generated=int8_gen, **info),
+        entry("serving/prefix/prefill_tokens_nosharing", nosharing_pt,
+              unit="tokens", prompt_pages=2, page_size=_PAGE_SIZE, **det),
+        entry("serving/prefix/prefill_tokens_shared", pst["prefill_tokens"],
+              unit="tokens", prompt_pages=2, page_size=_PAGE_SIZE, **det),
+        entry("serving/prefix/hits", pst["prefix_hits"], unit="hits",
+              misses=pst["prefix_misses"],
+              shared_pages=pst["shared_pages_mapped"], **det),
+        entry("serving/prefix/cow_forks", pst["cow_forks"], unit="forks",
+              **det),
+        entry("serving/prefix/mismatched_tokens", prefix_mismatches,
+              unit="tokens", **det),
+        entry("serving/kv/sim_shared_prefill_bytes",
+              sim_shared.phases[0].held_bytes
+              + sim_shared.phases[0].transient_bytes, unit="bytes",
+              nosharing_prefill_bytes=sim_noshare.phases[0].held_bytes
+              + sim_noshare.phases[0].transient_bytes, shared_pages=2,
+              **det),
+        entry("serving/pipeline/async_sync_mismatches", async_mismatches,
+              unit="tokens", n_requests=n_req, **det),
+        entry("serving/pipeline/async_tokens_per_s",
+              async_gen / max(async_s, 1e-9), unit="tokens/s",
+              generated=async_gen, **info),
     ]
 
 
@@ -151,7 +235,12 @@ def serving_gate_failures(entries: list) -> list:
     2. decode slot-steps must equal ``sum(T_r - 1)`` — finished requests may
        not burn decode FLOPs;
     3. the measured int8 paged pool must be >= ``INT8_KV_RATIO_MIN``x
-       smaller per cached token than the seed's dense bf16 slot cache.
+       smaller per cached token than the seed's dense bf16 slot cache;
+    4. a page-aligned shared-prefix pair must prefill STRICTLY fewer tokens
+       than 2x solo — by at least one full page — with exact token parity
+       (prefix sharing is a cost optimization, never a numerics change);
+    5. the pipelined async runtime must be token-identical to the
+       synchronous engine on the same requests under the fixed seed.
 
     Returns human-readable failure lines (empty == all gates hold)."""
     by_name = {e["name"]: e for e in entries}
@@ -159,7 +248,11 @@ def serving_gate_failures(entries: list) -> list:
             "serving/sched/decode_slot_tokens",
             "serving/sched/expected_slot_tokens",
             "serving/kv/int8_paged_bytes_per_token",
-            "serving/kv/bf16_dense_bytes_per_token")
+            "serving/kv/bf16_dense_bytes_per_token",
+            "serving/prefix/prefill_tokens_nosharing",
+            "serving/prefix/prefill_tokens_shared",
+            "serving/prefix/mismatched_tokens",
+            "serving/pipeline/async_sync_mismatches")
     if not any(n in by_name for n in need):
         # No serving family at all (synthetic/legacy record): nothing to
         # pair.  Fresh runs always emit the family via ``serving_suite``.
@@ -186,4 +279,23 @@ def serving_gate_failures(entries: list) -> list:
         fails.append(f"SERVING kv bytes: int8 paged pool is only {ratio:.2f}x"
                      f" smaller per token than dense bf16 slots "
                      f"(need >= {INT8_KV_RATIO_MIN}x)")
+    noshare = by_name["serving/prefix/prefill_tokens_nosharing"]["value"]
+    shared = by_name["serving/prefix/prefill_tokens_shared"]["value"]
+    page = by_name["serving/prefix/prefill_tokens_shared"]["meta"].get(
+        "page_size", _PAGE_SIZE)
+    if noshare - shared < page:
+        fails.append(f"SERVING prefix: shared pair prefilled {int(shared)} "
+                     f"tokens vs {int(noshare)} without sharing; must save "
+                     f"at least one full page ({int(page)} tokens)")
+    pmis = by_name["serving/prefix/mismatched_tokens"]["value"]
+    if pmis != 0:
+        fails.append(f"SERVING prefix: {int(pmis)} token(s) differ between "
+                     "shared-prefix and solo runs; COW sharing must not "
+                     "change tokens")
+    amis = by_name["serving/pipeline/async_sync_mismatches"]["value"]
+    if amis != 0:
+        fails.append(f"SERVING pipeline: {int(amis)} token(s) differ "
+                     "between the async runtime and the synchronous engine; "
+                     "the pipelined scheduler must be token-identical under "
+                     "a fixed seed")
     return fails

@@ -472,7 +472,8 @@ def dense_slot_bytes(cfg, batch_slots: int, capacity: int, *,
 
 def simulate_serve(cfg, *, batch_slots: int, num_pages: int, page_size: int,
                    prefill_tokens: int, prefill_batch: int = 1,
-                   quantized: bool = False, n_model: int = 1) -> MemTimeline:
+                   quantized: bool = False, shared_pages: int = 0,
+                   n_model: int = 1) -> MemTimeline:
     """Simulate the serving engine's per-device memory timeline.
 
     Two phases — ``prefill`` (whole-prompt forward at ``prefill_tokens``
@@ -484,8 +485,20 @@ def simulate_serve(cfg, *, batch_slots: int, num_pages: int, page_size: int,
     decode, the per-request page-gather views ``(B, pages_per_seq *
     page_size, Hkv, Dh)`` that ``paged_attention`` materializes.  Same
     jax-free shape arithmetic as :func:`simulate`.
+
+    ``shared_pages`` models prefix-cache hits (``prefix_cache=True``
+    engines): each sequence in the prefill batch maps that many full prompt
+    pages read-only from the cache, so only the unshared suffix is
+    forwarded — the prefill transient shrinks by ``shared_pages *
+    page_size`` tokens per sequence.  The pool's held bytes do NOT shrink
+    (the pool is sized at construction); sharing shows up as fewer pages
+    *consumed* per request, i.e. headroom, which the engine reports as
+    ``stats['shared_pages_mapped']``.
     """
     it = _itemsize(cfg.dtype)
+    prefill_tokens = max(
+        prefill_tokens - shared_pages * page_size * prefill_batch,
+        prefill_batch)
     pool_b = kv_page_bytes(cfg, num_pages, page_size, quantized=quantized)
     mode = "single" if n_model <= 1 else "ep"
     kinds = set(_layer_kinds(cfg))

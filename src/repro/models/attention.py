@@ -223,25 +223,31 @@ def attention_sublayer(x: jax.Array, p: dict, cfg, *, is_local: bool,
 
 def paged_attention_sublayer(x: jax.Array, p: dict, cfg, *, is_local: bool,
                              positions: jax.Array, pages, page_table,
-                             prefill: bool):
+                             prefill: bool, offsets=None,
+                             attn_impl: str = "dense"):
     """Attention sublayer against a block-paged cache (serving).
 
     ``prefill=True``: ``x`` is the whole right-padded prompt ``(B, S, d)``
     with shared ``positions = arange(S)``; every position's k/v is scattered
     through ``page_table`` (padded tails land on the trash page) and
     attention runs causally on the in-flight k/v — one jitted call fills the
-    cache, no token-at-a-time teacher forcing.  ``prefill=False``: S == 1
-    and ``positions`` are per-request ``(B,)`` write positions; the new k/v
-    is appended and attention gathers the request's pages.  Returns
-    ``(out, new_pages)``."""
+    cache, no token-at-a-time teacher forcing.  With ``offsets`` ``(B,)``
+    (prefix sharing), ``x`` is only each request's unshared SUFFIX:
+    ``positions`` is the absolute ``(B, S)`` grid, k/v scatter at
+    ``offsets[b] + t``, and attention gathers the request's pages — the
+    shared prefix KV is READ from cache, never recomputed.
+    ``prefill=False``: S == 1 and ``positions`` are per-request ``(B,)``
+    write positions; the new k/v is appended and attention gathers the
+    request's pages via the ``attn_impl`` implementation (``dense`` gather
+    or the Pallas page-walk kernel).  Returns ``(out, new_pages)``."""
     from repro.serve import paged_cache as PC
     B, S, _ = x.shape
     H = cfg.num_heads
     dh = cfg.resolved_head_dim
     window = cfg.sliding_window if is_local else 0
-    q, k, v, _ = _project_qkv(x, p, cfg, positions)
+    q, k, v, pos_b = _project_qkv(x, p, cfg, positions)
 
-    if prefill:
+    if prefill and offsets is None:
         new_pages = PC.write_prefill(pages, k, v, page_table)
         if cfg.use_pallas:
             from repro.kernels.flash_attention import flash_attention_fused
@@ -251,9 +257,14 @@ def paged_attention_sublayer(x: jax.Array, p: dict, cfg, *, is_local: bool,
                                 cap=cfg.attn_softcap,
                                 chunk=min(cfg.attn_chunk, S),
                                 block_skip=cfg.block_causal_skip)
+    elif prefill:
+        new_pages = PC.write_prefill_offset(pages, k, v, page_table, offsets)
+        o = PC.paged_gather_attention(q, new_pages, page_table, pos_b,
+                                      window=window, cap=cfg.attn_softcap)
     else:
         new_pages = PC.write_decode(pages, k, v, page_table, positions)
         o = PC.paged_attention(q, new_pages, page_table, positions,
-                               window=window, cap=cfg.attn_softcap)
+                               window=window, cap=cfg.attn_softcap,
+                               impl=attn_impl)
     o = tag(o.reshape(B, S, H * dh) @ p["wo"].astype(x.dtype), ATTN_OUT)
     return o, new_pages

@@ -106,7 +106,8 @@ def _apply_sublayer(x, p, kind: str, cfg, *, mesh, positions, cache,
             h, new_kv = paged_attention_sublayer(
                 h, p["attn"], cfg, is_local=is_local, positions=positions,
                 pages=cache[0], page_table=paged.page_table,
-                prefill=paged.prefill)
+                prefill=paged.prefill, offsets=paged.offsets,
+                attn_impl=paged.attn_impl)
         else:
             h, new_kv = attention_sublayer(
                 h, p["attn"], cfg, is_local=is_local, positions=positions,
@@ -343,10 +344,17 @@ def decode_step(params, cache, batch, pos, cfg, *, mesh=None):
 class PagedCtx(NamedTuple):
     """Static+dynamic context threaded to the paged attention sublayers.
     ``prefill`` is a Python bool (trace-static): it selects the whole-prompt
-    scatter+flash path vs the single-token append+gather path."""
+    scatter+flash path vs the single-token append+gather path.
+    ``offsets`` (``(B,)``, prefill only) switches prefill to the
+    prefix-sharing suffix path: tokens scatter at ``offsets[b] + t`` and
+    attention gathers cached pages instead of running flash on in-flight
+    k/v.  ``attn_impl`` (trace-static str) picks the registered decode
+    attention implementation (``dense`` | ``pallas``)."""
 
     page_table: jax.Array       # (B, pages_per_seq) int32 physical pages
     prefill: bool
+    offsets: jax.Array | None = None
+    attn_impl: str = "dense"
 
 
 def paged_supported(cfg) -> bool:
@@ -378,7 +386,8 @@ def init_paged_cache(cfg, num_pages: int, page_size: int, *,
         one_group)
 
 
-def prefill(params, tokens, lengths, cache, page_table, cfg, *, mesh=None):
+def prefill(params, tokens, lengths, cache, page_table, cfg, *, mesh=None,
+            offsets=None, attn_impl: str = "dense"):
     """Whole-prompt forward that fills the paged cache in ONE call.
 
     tokens: (B, S) right-padded prompts; lengths: (B,) true prompt lengths;
@@ -388,15 +397,24 @@ def prefill(params, tokens, lengths, cache, page_table, cfg, *, mesh=None):
     attention masks by per-request prefix length), and attention over the
     prompt itself is causal flash on the in-flight k/v.  Returns
     ``(logits (B, vocab) at each request's last prompt token, new_cache)``.
-    """
+
+    With ``offsets`` ``(B,)`` (prefix sharing), ``tokens`` holds only each
+    request's unshared SUFFIX (``lengths`` = suffix lengths): rows write at
+    absolute ``offsets[b] + t`` and attend through the page table, reading
+    the shared prefix KV from cache instead of recomputing it.  The logits
+    row is still each request's last real token (relative index
+    ``lengths - 1``)."""
     dt = jnp.dtype(cfg.dtype)
     if cfg.input_kind != "tokens":
         raise ValueError("paged serving decodes token streams")
     B, S = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
     x = x * (cfg.d_model ** 0.5)
-    positions = jnp.arange(S)
-    paged = PagedCtx(page_table, True)
+    if offsets is None:
+        positions = jnp.arange(S)
+    else:
+        positions = offsets[:, None] + jnp.arange(S)[None, :]   # (B, S)
+    paged = PagedCtx(page_table, True, offsets, attn_impl)
 
     def group_fn(x, scan_in):
         gp, cache_group = scan_in
@@ -424,16 +442,18 @@ def prefill(params, tokens, lengths, cache, page_table, cfg, *, mesh=None):
 
 
 def paged_decode_step(params, cache, tokens, lengths, page_table, cfg, *,
-                      mesh=None):
+                      mesh=None, attn_impl: str = "dense"):
     """One decode step with every request at its OWN position.
 
     tokens: (B, 1) the last sampled token per request; lengths: (B,) the
     absolute position that token is written at (== the request's current
-    token count).  Returns (logits (B, vocab), new_cache)."""
+    token count).  ``attn_impl`` picks the paged-attention implementation
+    (``dense`` gather or the Pallas page-walk kernel).  Returns
+    (logits (B, vocab), new_cache)."""
     dt = jnp.dtype(cfg.dtype)
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
     x = x * (cfg.d_model ** 0.5)
-    paged = PagedCtx(page_table, False)
+    paged = PagedCtx(page_table, False, None, attn_impl)
 
     def group_fn(x, scan_in):
         gp, cache_group = scan_in

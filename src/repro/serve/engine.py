@@ -7,55 +7,66 @@ families:
 * **prefill** — ONE whole-prompt forward per admitted batch (bucketed to
   power-of-two ``(batch, seq)`` shapes so the jit cache stays bounded) that
   scatters every prompt position's k/v through per-request *page tables*
-  into a block-paged KV pool (``serve/paged_cache``).  This replaces the
-  seed's token-at-a-time teacher-forcing loop — and its left-pad bug, where
-  pad tokens entered the cache at *valid* positions and a short prompt's
-  output depended on its batch-mates.  Prompts are right-padded and masked
-  by per-request prefix length, so batched output == solo output.
+  into a block-paged KV pool (``serve/paged_cache``).  Prompts are
+  right-padded and masked by per-request prefix length, so batched output ==
+  solo output (the left-pad parity gate).
 * **decode** — a single-token step over the full slot array with every
   request at its OWN position (``T.paged_decode_step``).  Inactive slots
-  point at the reserved trash page and cost no correctness.
+  point at the reserved trash page and cost no correctness.  The gather can
+  run as the dense jnp reference or the Pallas page-walk kernel
+  (``paged_kernel=`` / ``REPRO_PAGED_ATTN``, resolved at construction like
+  the grouped-GEMM backend).
 
-Scheduling is continuous: a request's slot and pages return to the pool the
-moment it emits EOS or hits ``max_new_tokens``, and the next pending request
-is admitted immediately — no head-of-line blocking on the batch's
-``max(max_new_tokens)``, and finished requests never burn decode FLOPs.
-Admission is under a page budget (``num_pages``); a pending request that
-does not fit increments ``stats['blocked_admissions']`` (the ``ep_a2a``
-overflow-accounting idiom) and waits, preserving FIFO order.
+Sampling is FOLDED INTO the jitted steps: only ``(slots,)`` token ids cross
+the host boundary each step, never ``(slots, vocab)`` logits.  Greedy
+argmaxes in-graph; ``greedy=False`` temperature-samples with a per-request
+PRNG key — ``fold_in(fold_in(seed_key, request_id), token_index)`` — so a
+request's token stream depends only on its own id and seed, NEVER on how
+requests were batched or scheduled.  That schedule-independence is what
+makes the async runtime (``serve/runtime``) token-identical to this
+synchronous path under a fixed seed (the pipeline parity gate).
+
+**Prefix sharing (``prefix_cache=True``)**: the engine keeps a persistent
+:class:`~repro.serve.paged_cache.PrefixCache` — a trie over full-page
+prompt chunks.  A finishing request donates its full prompt pages; a later
+request whose prompt shares a page-aligned prefix maps the cached pages
+read-only (one pool refcount each) and prefills ONLY the unshared suffix
+through the offset-prefill path.  When the prompt is exactly covered by
+shared pages, the last prompt token is re-fed and its target page is forked
+first — copy-on-write: the writer gets a private device-side copy
+(``paged_cache.copy_page``), the page table is remapped (branch-free, the
+trash-page idiom), and the sharer's page is never mutated.  Cache pages are
+evicted LRU-leaf-first when admission needs their space.
+
+Scheduling is continuous and split into three stages — **admission**
+(validation, prefix lookup, slot/page allocation, COW forks), **device**
+(jitted prefill/decode dispatch; everything stays on device, including each
+step's sampled tokens feeding the next step), and **sampling/emission**
+(the only host sync: token ids to Python, ``on_token`` callbacks, EOS/limit
+finish decisions).  The synchronous engine chains the stages inline;
+``serve/runtime.AsyncServeRuntime`` runs them in pipelined threads
+connected by ``WorkQueue``s.  A request's slot and pages return to the pool
+the moment it finishes; admission is under a page budget with FIFO blocking
+(``stats['blocked_admissions']``).
 
 ``kv_dtype='int8'`` stores the pool quantized via ``serve/kv_quant``'s
-symmetric per-(position, head) scheme — quantize at append, attend against
-int8 with f32 accumulation — roughly halving KV bytes per token.
-
-Sampling: ``greedy=True`` argmaxes; ``greedy=False`` temperature-samples
-with a per-step split of the engine's PRNG key, so a fixed ``seed`` makes a
-run deterministic.
+symmetric per-(position, head) scheme.
 
 Grouped-GEMM backend selection is context-scoped (DESIGN: mixed fleets share
-one config while each host/engine picks its fastest available backend):
-
-* the engine resolves its default backend **once, at construction** — via
-  ``repro.core.gmm_backend.resolve`` with the engine's ``gmm_backend``
-  argument at the call-site slot and ``cfg.gmm_backend`` at the config slot —
-  and holds the ``ResolvedBackend``.  Mutating ``REPRO_GMM_BACKEND``
-  afterwards cannot retarget a constructed engine, and two engines in one
-  process can run different backends over the same config;
-* each ``Request`` may carry its own ``gmm_backend`` override, validated at
-  enqueue time (an unknown name raises immediately, never mid-generate);
-* ``generate`` resolves per batch slot and groups slots by resolved backend,
-  so one batch can mix requests pinned to different backends.
-
-Decode/prefill steps are jitted per backend name (separate function objects
-keep the jit caches apart) with the concrete name baked into the config, and
-every call runs inside ``use_backend`` so an ambient scope at first-trace
-time cannot leak into the cached computation.
+one config while each host/engine picks its fastest available backend): the
+engine resolves once at construction (engine argument > ``use_backend``
+scope > ``cfg.gmm_backend`` > env > auto) and holds the
+``ResolvedBackend``; each ``Request`` may carry its own override, validated
+at enqueue time; ``generate`` groups slots by resolved backend.  Steps are
+jitted per backend name inside ``use_backend`` so an ambient scope at
+first-trace time cannot leak into the cached computation.
 """
 
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -73,12 +84,30 @@ class Request:
     max_new_tokens: int = 32
     eos_id: int = 2
     gmm_backend: str | None = None  # per-request override of the engine default
+    on_token: Callable[[int], None] | None = None   # streaming: per token
+    on_finish: Callable[[str], None] | None = None  # terminal event (reason)
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    finish_reason: str | None = None    # "eos" | "length" | "error"
+    rid: int | None = None              # engine-assigned id (PRNG lane)
 
 
 def _pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
+
+
+def _emit_token(r: Request, tok: int) -> None:
+    r.out_tokens.append(tok)
+    if r.on_token is not None:
+        r.on_token(tok)
+
+
+def _finish_request(r: Request, reason: str) -> None:
+    r.done = True
+    if r.finish_reason is None:
+        r.finish_reason = reason
+    if r.on_finish is not None:
+        r.on_finish(reason)
 
 
 class ServeEngine:
@@ -87,16 +116,20 @@ class ServeEngine:
                  num_pages: int | None = None, kv_dtype: str | None = None,
                  greedy: bool = True, temperature: float = 1.0,
                  seed: int = 0, gmm_backend: str | None = None,
+                 prefix_cache: bool = False, paged_kernel: str | None = None,
                  remat_policy=None, mesh=None):
         # Snapshot the backend resolution at construction: precedence is the
         # explicit engine argument > active use_backend scope >
         # cfg.gmm_backend > env > auto, frozen into a ResolvedBackend.
         self.backend = GB.resolve(gmm_backend, config=cfg.gmm_backend)
-        # Same discipline for the checkpoint plan: the engine argument
-        # (name/spec/plan) wins over cfg.remat_policy; an unparseable spec
-        # raises HERE, never mid-generate.  Decode never runs a backward, so
-        # the plan is provenance + config hygiene — the canonical spec is
-        # baked into the engine's cfg and surfaced as ``remat_plan``.
+        # The paged-attention implementation resolves with the same
+        # discipline (arg > REPRO_PAGED_ATTN env > auto) and is baked into
+        # the jitted steps — an unknown/unavailable kernel raises HERE.
+        self.paged_attn = PC.resolve_paged_attn(paged_kernel)
+        # Same for the checkpoint plan: the engine argument wins over
+        # cfg.remat_policy; an unparseable spec raises HERE, never
+        # mid-generate.  Decode never runs a backward, so the plan is
+        # provenance + config hygiene.
         self.remat_plan = CK.resolve_plan(remat_policy,
                                           config=cfg.remat_policy)
         self.cfg = cfg.replace(gmm_backend=self.backend.name,
@@ -143,43 +176,99 @@ class ServeEngine:
             raise ValueError("num_pages must be >= 2 (one is the trash page)")
         self.greedy = greedy
         self.temperature = temperature
-        self.key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
         self.pending: list[Request] = []
+        self._rid_counter = 0
+        # Persistent device state: the page pool, the paged KV cache, and
+        # the prefix trie live for the engine's life (prefix hits span
+        # generate() calls), lazily created at first use.
+        self._pool: PC.PagePool | None = None
+        self._cache = None
+        self._prefix = PC.PrefixCache() if prefix_cache else None
         self._decode_fns: dict[str, object] = {}
         self._prefill_fns: dict[tuple, object] = {}
+        # last_tok scatter for admitted slots (shape-specialized by jit).
+        self._merge_fn = jax.jit(
+            lambda lt, tk, idx: lt.at[idx, 0].set(tk[:idx.shape[0]]))
+        # COW fork: copy one physical page across every layer's pools
+        # (leaves are (num_groups, P, page_size, ...) — page axis is 1).
+        self._copy_page_fn = jax.jit(
+            lambda c, src, dst: jax.tree.map(
+                lambda a: a.at[:, dst].set(a[:, src]), c),
+            donate_argnums=(0,))
         self.stats = {"prefill_calls": 0, "prefill_tokens": 0,
                       "decode_steps": 0, "decode_slot_tokens": 0,
                       "generated_tokens": 0, "blocked_admissions": 0,
-                      "truncated_budgets": 0, "peak_pages_used": 0}
+                      "truncated_budgets": 0, "peak_pages_used": 0,
+                      "prefix_hits": 0, "prefix_misses": 0,
+                      "shared_pages_mapped": 0, "cow_forks": 0,
+                      "prefix_evictions": 0}
+
+    # -- persistent device state --------------------------------------------
+
+    def _ensure_state(self) -> None:
+        if self._pool is None:
+            self._pool = PC.PagePool(self.num_pages)
+            self._cache = T.init_paged_cache(self.cfg, self.num_pages,
+                                             self.page_size,
+                                             quantized=self.quantized)
 
     # -- jitted entry points ------------------------------------------------
 
+    def _sample_traced(self, logits, rid, gidx):
+        """In-graph sampling: (B, vocab) logits -> (B,) int32 token ids.
+        Greedy argmaxes; otherwise each row samples with its own
+        ``fold_in(fold_in(seed, rid), token_index)`` key — schedule- and
+        batch-independent, the property both parity gates lean on."""
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        base = self._base_key
+
+        def one(r, g, row):
+            key = jax.random.fold_in(jax.random.fold_in(base, r), g)
+            return jax.random.categorical(key, row / self.temperature)
+
+        return jax.vmap(one)(rid, gidx, logits).astype(jnp.int32)
+
     def _decode_for(self, backend_name: str):
         """The jitted single-token decode step specialized to one backend —
-        full slot array, per-request positions.  One function object per
-        backend keeps their jit caches separate."""
+        full slot array, per-request positions, sampling fused in (only the
+        ``(slots,)`` token ids ever reach the host)."""
         fn = self._decode_fns.get(backend_name)
         if fn is None:
             cfg = self.cfg.replace(gmm_backend=backend_name)
-            fn = jax.jit(
-                lambda p, c, tok, lens, pt: T.paged_decode_step(
-                    p, c, tok, lens, pt, cfg, mesh=self.mesh),
-                donate_argnums=(1,))   # cache updated in place
+            impl = self.paged_attn.name
+
+            def step(p, c, tok, lens, pt, rid, gidx):
+                logits, c2 = T.paged_decode_step(p, c, tok, lens, pt, cfg,
+                                                 mesh=self.mesh,
+                                                 attn_impl=impl)
+                return self._sample_traced(logits, rid, gidx), c2
+
+            fn = jax.jit(step, donate_argnums=(1,))   # cache updated in place
             self._decode_fns[backend_name] = fn
         return fn
 
-    def _prefill_for(self, backend_name: str, bs: int, seq: int):
-        """The jitted whole-prompt prefill for one (backend, batch-bucket,
-        seq-bucket) — the SHARK per-batch-size entry-point family, with
-        power-of-two bucketing keeping the family finite."""
-        key = (backend_name, bs, seq)
+    def _prefill_for(self, backend_name: str, bs: int, seq: int,
+                     prefix: bool):
+        """The jitted whole-prompt (or unshared-suffix) prefill for one
+        (backend, batch-bucket, seq-bucket, prefix-path) — the SHARK
+        per-batch-size entry-point family, with power-of-two bucketing
+        keeping the family finite.  Returns sampled tokens, not logits."""
+        key = (backend_name, bs, seq, prefix)
         fn = self._prefill_fns.get(key)
         if fn is None:
             cfg = self.cfg.replace(gmm_backend=backend_name)
-            fn = jax.jit(
-                lambda p, c, tok, lens, pt: T.prefill(
-                    p, tok, lens, c, pt, cfg, mesh=self.mesh),
-                donate_argnums=(1,))
+            impl = self.paged_attn.name
+
+            def pf(p, c, tok, lens, pt, offs, rid):
+                logits, c2 = T.prefill(
+                    p, tok, lens, c, pt, cfg, mesh=self.mesh,
+                    offsets=offs if prefix else None, attn_impl=impl)
+                gidx = jnp.zeros_like(rid)
+                return self._sample_traced(logits, rid, gidx), c2
+
+            fn = jax.jit(pf, donate_argnums=(1,))
             self._prefill_fns[key] = fn
         return fn
 
@@ -215,6 +304,9 @@ class ServeEngine:
             raise ValueError(
                 f"request needs {need} pages but the pool only has "
                 f"{self.num_pages - 1} allocatable pages")
+        if request.rid is None:
+            request.rid = self._rid_counter
+            self._rid_counter += 1
 
     # -- queue API ----------------------------------------------------------
 
@@ -249,132 +341,305 @@ class ServeEngine:
             self._serve_group([requests[i] for i in idxs], name)
         return requests
 
-    def _sample(self, logits) -> np.ndarray:
-        """Next token per row.  Greedy argmaxes; otherwise temperature
-        sampling with a fresh per-step split of the engine key (fixed seed
-        => deterministic run)."""
-        if self.greedy:
-            return np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-        self.key, k = jax.random.split(self.key)
-        nxt = jax.random.categorical(k, logits / self.temperature, axis=-1)
-        return np.asarray(nxt).astype(np.int32)
-
     def _serve_group(self, requests: list[Request], backend_name: str):
-        """Continuously serve one group of requests sharing a backend."""
-        ps = self.page_size
-        pps = self.pages_per_seq
-        pool = PC.PagePool(self.num_pages)
-        waiting = deque(requests)
-        free_slots = list(range(self.slots - 1, -1, -1))
-        owner: list[Request | None] = [None] * self.slots
-        pages_of: list[list[int] | None] = [None] * self.slots
-        page_table = np.full((self.slots, pps), PC.TRASH_PAGE, np.int32)
-        lengths = np.zeros(self.slots, np.int32)     # tokens in cache
-        last_tok = np.zeros((self.slots, 1), np.int32)
-        cache = T.init_paged_cache(self.cfg, self.num_pages, ps,
-                                   quantized=self.quantized)
-        decode = self._decode_for(backend_name)
-
-        def finish(slot: int):
-            pool.free(pages_of[slot])
-            owner[slot] = None
-            pages_of[slot] = None
-            page_table[slot, :] = PC.TRASH_PAGE   # stale entries must not
-            lengths[slot] = 0                     # alias freshly reused pages
-            last_tok[slot, 0] = 0
-            free_slots.append(slot)
-
+        """Continuously serve one group of requests sharing a backend: the
+        three pipeline stages chained inline (the async runtime runs the
+        same :class:`_GroupScheduler` stages across threads)."""
+        sched = _GroupScheduler(self, requests, backend_name)
         # The use_backend scope pins trace-time resolution to this group's
         # backend even if the caller holds an ambient scope of their own.
         with GB.use_backend(backend_name):
-            while waiting or any(o is not None for o in owner):
-                # -- admit from pending the moment slots + pages allow ------
-                admit: list[int] = []
-                while waiting and free_slots:
-                    r = waiting[0]
-                    need = PC.pages_needed(
-                        r.prompt.size + self._limit(r) - 1, ps)
-                    if need > pool.free_pages:
-                        # FIFO under the page budget: the head waits (and is
-                        # accounted), later requests do not jump it.
-                        self.stats["blocked_admissions"] += 1
-                        break
-                    waiting.popleft()
-                    if self._limit(r) < r.max_new_tokens:
-                        # Capacity silently bounds the budget; surface it.
-                        self.stats["truncated_budgets"] += 1
-                    slot = free_slots.pop()
-                    pgs = pool.alloc(need)
-                    owner[slot] = r
-                    pages_of[slot] = pgs
-                    page_table[slot, :] = PC.TRASH_PAGE
-                    page_table[slot, :need] = pgs
-                    admit.append(slot)
-
-                # -- prefill the newly admitted batch in ONE jitted call ----
-                if admit:
-                    # Clamp the pow2 seq bucket to the page table's logical
-                    # width: a wider bucket would make write_prefill's pad
-                    # tail spill past the table (routed to the trash page,
-                    # but the clamp keeps the prefill shape honest and the
-                    # jit-cache family within the table).
-                    sb = min(_pow2(max(owner[s].prompt.size for s in admit)),
-                             pps * ps)
-                    bb = _pow2(len(admit))
-                    toks = np.zeros((bb, sb), np.int32)
-                    lens = np.zeros(bb, np.int32)
-                    pt = np.full((bb, pps), PC.TRASH_PAGE, np.int32)
-                    for i, s in enumerate(admit):
-                        p = owner[s].prompt
-                        toks[i, :p.size] = p
-                        lens[i] = p.size
-                        pt[i] = page_table[s]
-                    pf = self._prefill_for(backend_name, bb, sb)
-                    logits, cache = pf(self.params, cache, jnp.asarray(toks),
-                                       jnp.asarray(lens), jnp.asarray(pt))
-                    self.stats["prefill_calls"] += 1
-                    self.stats["prefill_tokens"] += int(lens.sum())
-                    nxt = self._sample(logits)
-                    for i, s in enumerate(admit):
-                        r = owner[s]
-                        tok = int(nxt[i])
-                        r.out_tokens.append(tok)
-                        self.stats["generated_tokens"] += 1
-                        lengths[s] = r.prompt.size
-                        last_tok[s, 0] = tok
-                        if tok == r.eos_id:
-                            r.done = True
-                        if r.done or len(r.out_tokens) >= self._limit(r):
-                            finish(s)
-
-                active = [s for s in range(self.slots)
-                          if owner[s] is not None]
-                if not active:
-                    continue
-
-                # -- one decode step over the full slot array ---------------
-                # Inactive slots write through the trash page and their
-                # logits rows are ignored — no per-shape re-jit as occupancy
-                # changes.
-                logits, cache = decode(self.params, cache,
-                                       jnp.asarray(last_tok),
-                                       jnp.asarray(lengths),
-                                       jnp.asarray(page_table))
-                self.stats["decode_steps"] += 1
-                self.stats["decode_slot_tokens"] += len(active)
-                nxt = self._sample(logits)
-                for s in active:
-                    r = owner[s]
-                    tok = int(nxt[s])
-                    r.out_tokens.append(tok)
-                    self.stats["generated_tokens"] += 1
-                    lengths[s] += 1
-                    last_tok[s, 0] = tok
-                    if tok == r.eos_id:
-                        r.done = True
-                    if r.done or len(r.out_tokens) >= self._limit(r):
-                        finish(s)
-
+            try:
+                while sched.has_work():
+                    admit = sched.try_admit()             # admission stage
+                    if admit:
+                        snap = [(s, sched.owner[s]) for s in admit]
+                        ptoks = sched.dispatch_prefill(admit)   # device
+                        for s in sched.emit_prefill(snap, np.asarray(ptoks)):
+                            sched.release(s)              # emission stage
+                    out = sched.dispatch_decode()         # device stage
+                    if out is None:
+                        continue
+                    toks, snap = out
+                    for s in sched.emit_decode(snap, np.asarray(toks)):
+                        sched.release(s)                  # emission stage
+            except Exception:
+                for r in sched.in_flight() + list(sched.waiting):
+                    if not r.done:
+                        _finish_request(r, "error")
+                raise
         self.stats["peak_pages_used"] = max(
             self.stats["peak_pages_used"],
-            self.num_pages - 1 - pool.min_free)
+            self.num_pages - 1 - self._pool.min_free)
+
+
+class _GroupScheduler:
+    """The old ``_serve_group`` monolith split into its three stages.
+
+    * **admission** — :meth:`try_admit`: FIFO under the page budget, prefix
+      trie lookup, shared-page mapping (refcounts), COW forks, LRU cache
+      eviction under pressure;
+    * **device** — :meth:`dispatch_prefill` / :meth:`dispatch_decode`: build
+      host staging buffers, issue the jitted steps, keep the sampled-token
+      array device-resident (each step's output feeds the next step's input
+      without a host round-trip);
+    * **sampling/emission** — :meth:`emit_prefill` / :meth:`emit_decode`:
+      the only host sync; append tokens, fire streaming callbacks, decide
+      EOS/limit finishes.  :meth:`release` returns a finished slot's pages
+      (donating full prompt pages to the prefix cache).
+
+    The synchronous engine calls the stages back-to-back; the async runtime
+    (``serve/runtime``) calls admission+device on its device thread and
+    emit_* on its emission thread, connected by ``WorkQueue``s.  Because
+    sampling keys are per-request (never per-step-of-the-engine), tokens do
+    not depend on which stage interleaving ran them.
+    """
+
+    def __init__(self, eng: ServeEngine, requests: list[Request],
+                 backend_name: str):
+        eng._ensure_state()
+        self.eng = eng
+        self.backend_name = backend_name
+        self.pool = eng._pool
+        self.ps = eng.page_size
+        self.pps = eng.pages_per_seq
+        n = eng.slots
+        self.waiting: deque[Request] = deque(requests)
+        self.free_slots = list(range(n - 1, -1, -1))
+        self.owner: list[Request | None] = [None] * n
+        self.mapped_pages: list[list[int] | None] = [None] * n
+        self.shared_cols: list[dict | None] = [None] * n
+        self.suffix_start = [0] * n
+        self.cap_of = np.zeros(n, np.int32)     # max tokens ever written
+        self.page_table = np.full((n, self.pps), PC.TRASH_PAGE, np.int32)
+        self.lengths = np.zeros(n, np.int32)    # tokens in cache
+        self.gen_count = np.zeros(n, np.int32)  # tokens produced (PRNG lane)
+        self.rid = np.zeros(n, np.int32)
+        self.last_tok = jnp.zeros((n, 1), jnp.int32)   # device-resident
+        self.decode_fn = eng._decode_for(backend_name)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(o is not None for o in self.owner)
+
+    def in_flight(self) -> list[Request]:
+        return [o for o in self.owner if o is not None]
+
+    # -- admission stage ----------------------------------------------------
+
+    def try_admit(self) -> list[int]:
+        """Admit pending requests while slots + pages allow, preserving FIFO
+        order under the page budget.  With the prefix cache enabled, each
+        prompt's full-page chain is looked up first: hits map the cached
+        pages read-only (share refs) and shrink the private-page need to the
+        unshared suffix; a fully-covered prompt re-feeds its last token into
+        a copy-on-write fork of the final shared page."""
+        eng = self.eng
+        st = eng.stats
+        admit: list[int] = []
+        while self.waiting and self.free_slots:
+            r = self.waiting[0]
+            plen = int(r.prompt.size)
+            limit = eng._limit(r)
+            total_need = PC.pages_needed(plen + limit - 1, self.ps)
+            shared: list[int] = []
+            if eng._prefix is not None:
+                shared = eng._prefix.lookup(PC.page_keys(r.prompt, self.ps))
+            n_shared = len(shared)
+            # A prompt exactly covered by shared pages still needs one
+            # forward token for its first logits: re-feed the last prompt
+            # token (its write forks the final shared page — COW).
+            refeed = n_shared > 0 and n_shared * self.ps >= plen
+            sstart = plen - 1 if refeed else n_shared * self.ps
+            need_private = total_need - n_shared + (1 if refeed else 0)
+            if need_private > self.pool.free_pages and eng._prefix is not None:
+                st["prefix_evictions"] += eng._prefix.evict(
+                    self.pool, need_private - self.pool.free_pages)
+            if need_private > self.pool.free_pages:
+                # FIFO under the page budget: the head waits (and is
+                # accounted), later requests do not jump it.
+                st["blocked_admissions"] += 1
+                break
+            self.waiting.popleft()
+            if limit < r.max_new_tokens:
+                # Capacity silently bounds the budget; surface it.
+                st["truncated_budgets"] += 1
+            if eng._prefix is not None:
+                st["prefix_hits" if n_shared else "prefix_misses"] += 1
+                st["shared_pages_mapped"] += n_shared
+            slot = self.free_slots.pop()
+            for pg in shared:
+                self.pool.share(pg)
+            priv = self.pool.alloc(need_private)
+            row = np.full(self.pps, PC.TRASH_PAGE, np.int32)
+            row[:n_shared] = shared
+            n_tail = total_need - n_shared
+            if n_tail:
+                row[n_shared:total_need] = priv[:n_tail]
+            self.owner[slot] = r
+            self.mapped_pages[slot] = shared + priv
+            self.shared_cols[slot] = {c: shared[c] for c in range(n_shared)}
+            self.suffix_start[slot] = sstart
+            self.cap_of[slot] = plen + limit - 1
+            self.lengths[slot] = 0
+            self.gen_count[slot] = 0
+            self.rid[slot] = r.rid
+            if refeed:
+                self._fork(slot, n_shared - 1, priv[n_tail], row)
+            self.page_table[slot] = row
+            admit.append(slot)
+        return admit
+
+    def _fork(self, slot: int, col: int, new_page: int, row) -> None:
+        """Copy-on-write: fork shared column ``col`` into ``new_page`` (a
+        device-side page copy), remap the writer's table, and drop the
+        writer's reference on the shared original — the sharer's page is
+        never written."""
+        eng = self.eng
+        old = self.shared_cols[slot].pop(col)
+        eng._cache = eng._copy_page_fn(eng._cache, old, new_page)
+        row[col] = new_page
+        self.pool.release(old)
+        self.mapped_pages[slot].remove(old)
+        eng.stats["cow_forks"] += 1
+
+    # -- device stage -------------------------------------------------------
+
+    def dispatch_prefill(self, admit: list[int]):
+        """One jitted prefill over the admitted batch (suffixes only when
+        prefix sharing applies).  Returns the sampled-token device array;
+        the slots' ``last_tok`` lanes are updated device-side."""
+        eng = self.eng
+        use_prefix = eng._prefix is not None
+        sufs = [self.owner[s].prompt.size - self.suffix_start[s]
+                for s in admit]
+        # Clamp the pow2 seq bucket to the page table's logical width: a
+        # wider bucket would make the prefill pad tail spill past the table
+        # (routed to the trash page, but the clamp keeps the prefill shape
+        # honest and the jit-cache family within the table).
+        sb = min(_pow2(max(sufs)), self.pps * self.ps)
+        bb = _pow2(len(admit))
+        toks = np.zeros((bb, sb), np.int32)
+        lens = np.zeros(bb, np.int32)
+        offs = np.zeros(bb, np.int32)
+        rid = np.zeros(bb, np.int32)
+        pt = np.full((bb, self.pps), PC.TRASH_PAGE, np.int32)
+        for i, s in enumerate(admit):
+            r = self.owner[s]
+            suf = r.prompt[self.suffix_start[s]:]
+            toks[i, :suf.size] = suf
+            lens[i] = suf.size
+            offs[i] = self.suffix_start[s]
+            rid[i] = self.rid[s]
+            pt[i] = self.page_table[s]
+        pf = eng._prefill_for(self.backend_name, bb, sb, use_prefix)
+        ptoks, eng._cache = pf(eng.params, eng._cache, jnp.asarray(toks),
+                               jnp.asarray(lens), jnp.asarray(pt),
+                               jnp.asarray(offs), jnp.asarray(rid))
+        eng.stats["prefill_calls"] += 1
+        eng.stats["prefill_tokens"] += int(lens[:len(admit)].sum())
+        self.last_tok = eng._merge_fn(
+            self.last_tok, ptoks,
+            jnp.asarray(np.asarray(admit, np.int32)))
+        for s in admit:
+            self.lengths[s] = self.owner[s].prompt.size
+            self.gen_count[s] = 1
+        return ptoks
+
+    def dispatch_decode(self):
+        """One decode step over the full slot array.  Slots that already
+        wrote their last reserved position ("frozen": the async runtime may
+        run ahead of finish notifications) are routed to the trash page so
+        they cannot touch live pages.  Returns ``(token device array,
+        [(slot, request, token_index), ...])`` for the emission stage, or
+        ``None`` when nothing is live."""
+        eng = self.eng
+        live = [s for s in range(eng.slots)
+                if self.owner[s] is not None
+                and self.lengths[s] < self.cap_of[s]]
+        if not live:
+            return None
+        frozen = [s for s in range(eng.slots)
+                  if self.owner[s] is not None and s not in live]
+        lens_step = self.lengths
+        pt_step = self.page_table
+        if frozen:
+            lens_step = lens_step.copy()
+            pt_step = pt_step.copy()
+            for s in frozen:
+                lens_step[s] = 0
+                pt_step[s] = PC.TRASH_PAGE
+        gidx = self.gen_count
+        toks, eng._cache = self.decode_fn(
+            eng.params, eng._cache, self.last_tok, jnp.asarray(lens_step),
+            jnp.asarray(pt_step), jnp.asarray(self.rid), jnp.asarray(gidx))
+        self.last_tok = toks[:, None]
+        eng.stats["decode_steps"] += 1
+        eng.stats["decode_slot_tokens"] += len(live)
+        snap = [(s, self.owner[s], int(self.gen_count[s])) for s in live]
+        for s in live:
+            self.lengths[s] += 1
+            self.gen_count[s] += 1
+        return toks, snap
+
+    # -- sampling/emission stage --------------------------------------------
+
+    def _emit_one(self, r: Request, tok: int) -> bool:
+        """Append + stream one token; returns True when the request is now
+        finished (EOS or budget)."""
+        eng = self.eng
+        _emit_token(r, tok)
+        eng.stats["generated_tokens"] += 1
+        if tok == r.eos_id:
+            _finish_request(r, "eos")
+        elif len(r.out_tokens) >= eng._limit(r):
+            _finish_request(r, "length")
+        return r.done
+
+    def emit_prefill(self, snap: list[tuple[int, Request]],
+                     np_toks) -> list[int]:
+        """Emit each admitted request's first token; returns slots to
+        release."""
+        finished = []
+        for i, (s, r) in enumerate(snap):
+            if r.done:       # async run-ahead: already terminal
+                continue
+            if self._emit_one(r, int(np_toks[i])):
+                finished.append(s)
+        return finished
+
+    def emit_decode(self, snap: list[tuple[int, Request, int]],
+                    np_toks) -> list[int]:
+        """Emit one decode step's tokens; returns slots to release.  Tokens
+        for requests that finished since dispatch (async run-ahead) are
+        dropped — the synchronous path never produces them."""
+        finished = []
+        for s, r, _tidx in snap:
+            if r.done:
+                continue
+            if self._emit_one(r, int(np_toks[s])):
+                finished.append(s)
+        return finished
+
+    def release(self, slot: int) -> None:
+        """Return a finished slot's pages.  With the prefix cache, the
+        request's FULL prompt pages are donated to the trie first (the
+        cache adopts one reference per newly cached page); every other
+        reference is dropped in a single batch so the pre-refcount LIFO
+        reuse order is preserved exactly."""
+        eng = self.eng
+        r = self.owner[slot]
+        pages = self.mapped_pages[slot]
+        adopted: set[int] = set()
+        if eng._prefix is not None:
+            n_full = r.prompt.size // self.ps
+            chain = [int(self.page_table[slot, c]) for c in range(n_full)]
+            adopted = eng._prefix.insert(
+                PC.page_keys(r.prompt, self.ps), chain)
+        self.pool.free([p for p in pages if p not in adopted])
+        self.owner[slot] = None
+        self.mapped_pages[slot] = None
+        self.shared_cols[slot] = None
+        self.page_table[slot, :] = PC.TRASH_PAGE   # stale entries must not
+        self.lengths[slot] = 0                     # alias freshly reused pages
+        self.cap_of[slot] = 0
+        self.free_slots.append(slot)

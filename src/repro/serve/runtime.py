@@ -1,0 +1,393 @@
+"""Asynchronous serving runtime: the engine's scheduler stages, pipelined.
+
+``ServeEngine._serve_group`` chains three stages inline — admission
+(validation, prefix lookup, page allocation), device (jitted
+prefill/decode dispatch), and sampling/emission (the only host sync) —
+serialized, so the device sits idle during every host round-trip.  This
+module runs the SAME ``_GroupScheduler`` stages on three pipelined threads
+connected by bounded :class:`WorkQueue`s:
+
+* **admission thread** — pops submitted requests, stages each prompt into a
+  bounded :class:`TransferBufferPool` buffer (the pool is the backpressure:
+  when every buffer is in flight, admission waits rather than queueing
+  unbounded host copies), and hands the request to the device thread;
+* **device thread** — owns the scheduler state (slots, page tables, pool,
+  prefix trie) and the device-resident ``last_tok`` array; admits staged
+  requests, dispatches prefill for new arrivals OVERLAPPED with in-flight
+  decode, and pushes each step's device token array to the emission queue
+  WITHOUT waiting on it (the bounded queue is the device-side
+  backpressure);
+* **emission thread** — syncs the token ids to host (``np.asarray``, the
+  pipeline's only blocking transfer), appends/streams them (``on_token``),
+  decides EOS/budget finishes, and posts finished slots back to the device
+  thread for release.
+
+The device thread may run AHEAD of finish notifications: a slot whose
+request finished two queue entries ago still decodes until its release
+arrives.  That run-ahead is harmless by construction — the scheduler
+freezes a slot once it has written its last reserved position (writes
+route to the trash page), emission drops tokens for finished requests, and
+sampling keys are per-``(request id, token index)`` so tokens never depend
+on scheduling.  Those three properties make the pipelined runtime
+TOKEN-IDENTICAL to the synchronous engine under a fixed seed — asserted by
+``tests/test_runtime.py`` and the ``serving/pipeline`` bench gate.
+
+Terminal events: every request ends with exactly one ``on_finish(reason)``
+— ``"eos"``, ``"length"``, or ``"error"`` (a crashed pipeline finishes
+every in-flight request with ``"error"`` before re-raising from ``run`` /
+``close``).  :meth:`AsyncServeRuntime.stream` wraps the callbacks in an
+iterator: it yields token ids as they emit and raises ``StopIteration``
+carrying the finish reason.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from repro.core import gmm_backend as GB
+from repro.serve.engine import Request, ServeEngine, _GroupScheduler
+
+_SENTINEL = object()
+
+
+class WorkQueue:
+    """A bounded FIFO between pipeline stages, instrumented: depth high-water
+    mark and producer blocking are visible in ``stats`` so a starved stage
+    can be diagnosed from counters rather than profiles."""
+
+    def __init__(self, name: str, maxsize: int = 0):
+        self.name = name
+        self._q: queue.Queue = queue.Queue(maxsize=maxsize)
+        self._lock = threading.Lock()
+        self.stats = {"puts": 0, "gets": 0, "max_depth": 0, "put_waits": 0}
+
+    def put(self, item) -> None:
+        if self._q.maxsize and self._q.full():
+            with self._lock:
+                self.stats["put_waits"] += 1
+        self._q.put(item)
+        with self._lock:
+            self.stats["puts"] += 1
+            self.stats["max_depth"] = max(self.stats["max_depth"],
+                                          self._q.qsize())
+
+    def get(self, timeout: float | None = None):
+        """Pop one item; returns ``None`` on timeout (or immediately when
+        ``timeout=None`` finds the queue empty)."""
+        try:
+            item = (self._q.get_nowait() if timeout is None
+                    else self._q.get(timeout=timeout))
+        except queue.Empty:
+            return None
+        with self._lock:
+            self.stats["gets"] += 1
+        return item
+
+
+class TransferBuffer:
+    """One reusable host staging buffer (stand-in for pinned H2D memory):
+    a prompt is copied in on the admission thread and the buffer is held
+    until the device thread has dispatched that request's prefill."""
+
+    def __init__(self, capacity: int):
+        self.arr = np.zeros(capacity, np.int32)
+        self.used = 0
+
+    def stage(self, prompt: np.ndarray) -> None:
+        self.used = prompt.size
+        self.arr[:self.used] = prompt
+
+
+class TransferBufferPool:
+    """A bounded pool of :class:`TransferBuffer`s.  ``acquire`` blocks when
+    every buffer is in flight — this bound, not an unbounded queue, is what
+    throttles admission when the device falls behind."""
+
+    def __init__(self, n: int, capacity: int):
+        self._free: queue.Queue = queue.Queue()
+        for _ in range(n):
+            self._free.put(TransferBuffer(capacity))
+        self.size = n
+        self.stats = {"acquires": 0, "acquire_waits": 0}
+
+    def acquire(self) -> TransferBuffer:
+        if self._free.empty():
+            self.stats["acquire_waits"] += 1
+        buf = self._free.get()
+        self.stats["acquires"] += 1
+        return buf
+
+    def release(self, buf: TransferBuffer) -> None:
+        self._free.put(buf)
+
+
+class RequestHandle:
+    """Caller-side view of a submitted request: iterate :meth:`stream` for
+    live tokens, or block on :meth:`result` for the finished request."""
+
+    def __init__(self, request: Request, runtime: "AsyncServeRuntime"):
+        self.request = request
+        self._runtime = runtime
+        self._events: queue.Queue = queue.Queue()
+        self._done = threading.Event()
+        prev_tok, prev_fin = request.on_token, request.on_finish
+
+        def on_token(tok: int) -> None:
+            self._events.put(("token", tok))
+            if prev_tok is not None:
+                prev_tok(tok)
+
+        def on_finish(reason: str) -> None:
+            self._events.put(("finish", reason))
+            self._done.set()
+            if prev_fin is not None:
+                prev_fin(reason)
+
+        request.on_token = on_token
+        request.on_finish = on_finish
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def finish_reason(self) -> str | None:
+        return self.request.finish_reason
+
+    @property
+    def tokens(self) -> list:
+        return list(self.request.out_tokens)
+
+    def stream(self, timeout: float = 60.0) -> Iterator[int]:
+        """Yield token ids as the emission stage produces them; the
+        generator's ``StopIteration`` value is the finish reason."""
+        while True:
+            kind, payload = self._events.get(timeout=timeout)
+            if kind == "finish":
+                return payload
+            yield payload
+
+    def result(self, timeout: float | None = None) -> Request:
+        if not self._done.wait(timeout):
+            raise TimeoutError("request did not finish in time")
+        self._runtime._check_error()
+        return self.request
+
+
+class AsyncServeRuntime:
+    """Pipelined front-end over a :class:`ServeEngine`.
+
+    One runtime owns one engine and serves the engine's default backend
+    (per-request backend overrides would split the slot array across jit
+    families mid-flight; use separate engines for mixed fleets).  Threads
+    start lazily on first submit; ``close()`` (or the context manager)
+    drains and joins them.
+    """
+
+    def __init__(self, engine: ServeEngine, *, queue_depth: int = 4,
+                 transfer_buffers: int = 4):
+        if queue_depth < 1 or transfer_buffers < 1:
+            raise ValueError("queue_depth and transfer_buffers must be >= 1")
+        self.engine = engine
+        self.buffers = TransferBufferPool(transfer_buffers, engine.capacity)
+        self.ingress_q = WorkQueue("ingress")                   # -> admission
+        self.staged_q = WorkQueue("staged", maxsize=queue_depth)  # -> device
+        self.emit_q = WorkQueue("emit", maxsize=queue_depth)    # -> emission
+        self.finish_q = WorkQueue("finish")                     # -> device
+        self._sched: _GroupScheduler | None = None
+        self._threads: list[threading.Thread] = []
+        self._wake = threading.Event()
+        self._closed = False
+        self._error: BaseException | None = None
+        self._lock = threading.Lock()
+        self._bufs: dict[int, TransferBuffer] = {}   # rid -> staged buffer
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _ensure_started(self) -> None:
+        if self._threads:
+            return
+        self._sched = _GroupScheduler(self.engine, [],
+                                      self.engine.backend.name)
+        for name, fn in (("admission", self._admission_loop),
+                         ("device", self._device_loop),
+                         ("emission", self._emission_loop)):
+            t = threading.Thread(target=fn, name=f"serve-{name}",
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _check_error(self) -> None:
+        if self._error is not None:
+            raise RuntimeError("serving pipeline failed") from self._error
+
+    def close(self) -> None:
+        """Drain in-flight requests, stop the pipeline, join the threads."""
+        if self._closed:
+            if self._threads:
+                for t in self._threads:
+                    t.join(timeout=60.0)
+            self._check_error()
+            return
+        self._closed = True
+        if self._threads:
+            self.ingress_q.put(_SENTINEL)
+            self._wake.set()
+            for t in self._threads:
+                t.join(timeout=60.0)
+        if self._sched is not None and self.engine._pool is not None:
+            self.engine.stats["peak_pages_used"] = max(
+                self.engine.stats["peak_pages_used"],
+                self.engine.num_pages - 1 - self.engine._pool.min_free)
+        self._check_error()
+
+    def __enter__(self) -> "AsyncServeRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, request: Request) -> RequestHandle:
+        """Validate (raises HERE, on the caller's thread) and hand the
+        request to the pipeline; returns immediately with a handle."""
+        if self._closed:
+            raise RuntimeError("runtime is closed")
+        self._check_error()
+        resolved = self.engine.resolve_request(request)
+        if resolved.name != self.engine.backend.name:
+            raise ValueError(
+                f"async runtime serves the engine backend "
+                f"{self.engine.backend.name!r}; request asked for "
+                f"{resolved.name!r} (use a separate engine)")
+        self.engine._validate(request)
+        handle = RequestHandle(request, self)
+        self._ensure_started()
+        self.ingress_q.put(request)
+        return handle
+
+    def stream(self, request: Request, timeout: float = 60.0):
+        """Submit + iterate: yields token ids live, terminal event as the
+        generator return value."""
+        return self.submit(request).stream(timeout=timeout)
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Submit a batch and block until every request reached a terminal
+        event.  The runtime stays open for further submissions."""
+        handles = [self.submit(r) for r in requests]
+        for h in handles:
+            h.result(timeout=600.0)
+        return requests
+
+    # -- pipeline threads ---------------------------------------------------
+
+    def _admission_loop(self) -> None:
+        try:
+            while True:
+                item = self.ingress_q.get(timeout=0.1)
+                if item is _SENTINEL:
+                    self.staged_q.put(_SENTINEL)
+                    return
+                if item is None:
+                    if self._error is not None:
+                        return
+                    continue
+                buf = self.buffers.acquire()     # backpressure lives here
+                buf.stage(item.prompt)
+                self._bufs[item.rid] = buf
+                self.staged_q.put(item)
+                self._wake.set()
+        except BaseException as e:      # pragma: no cover - defensive
+            self._fail(e)
+
+    def _device_loop(self) -> None:
+        sched = self._sched
+        try:
+            with GB.use_backend(sched.backend_name):
+                closing = False
+                while True:
+                    progressed = False
+                    while (s := self.finish_q.get()) is not None:
+                        sched.release(s)
+                        progressed = True
+                    while (r := self.staged_q.get()) is not None:
+                        if r is _SENTINEL:
+                            closing = True
+                        else:
+                            sched.waiting.append(r)
+                            progressed = True
+                    admit = sched.try_admit()
+                    if admit:
+                        snap = [(s, sched.owner[s]) for s in admit]
+                        ptoks = sched.dispatch_prefill(admit)
+                        for s in admit:
+                            buf = self._bufs.pop(sched.owner[s].rid, None)
+                            if buf is not None:
+                                self.buffers.release(buf)
+                        self.emit_q.put(("prefill", snap, ptoks))
+                        progressed = True
+                    out = sched.dispatch_decode()
+                    if out is not None:
+                        toks, snap = out
+                        self.emit_q.put(("decode", snap, toks))
+                        progressed = True
+                    if not progressed:
+                        if closing and not sched.has_work():
+                            self.emit_q.put(_SENTINEL)
+                            return
+                        self._wake.wait(0.002)
+                        self._wake.clear()
+        except BaseException as e:
+            self._fail(e)
+            self.emit_q.put(_SENTINEL)
+
+    def _emission_loop(self) -> None:
+        sched = self._sched
+        try:
+            while True:
+                item = self.emit_q.get(timeout=0.1)
+                if item is _SENTINEL:
+                    return
+                if item is None:
+                    if self._error is not None:
+                        return
+                    continue
+                kind, snap, dev_toks = item
+                np_toks = np.asarray(dev_toks)   # the pipeline's only sync
+                if kind == "prefill":
+                    finished = sched.emit_prefill(snap, np_toks)
+                else:
+                    finished = sched.emit_decode(snap, np_toks)
+                for s in finished:
+                    self.finish_q.put(s)
+                if finished:
+                    self._wake.set()
+        except BaseException as e:      # pragma: no cover - defensive
+            self._fail(e)
+
+    def _fail(self, exc: BaseException) -> None:
+        """First failure wins: record it, terminate every non-finished
+        request with an ``"error"`` event, and unblock the other stages."""
+        with self._lock:
+            if self._error is None:
+                self._error = exc
+        sched = self._sched
+        seen = []
+        if sched is not None:
+            seen = sched.in_flight() + list(sched.waiting)
+        while (r := self.ingress_q.get()) is not None:
+            if r is not _SENTINEL:
+                seen.append(r)
+        while (r := self.staged_q.get()) is not None:
+            if r is not _SENTINEL:
+                seen.append(r)
+        from repro.serve.engine import _finish_request
+        for r in seen:
+            if isinstance(r, Request) and not r.done:
+                _finish_request(r, "error")
+        self._wake.set()

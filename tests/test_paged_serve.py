@@ -219,8 +219,9 @@ def test_admission_order_under_page_budget(params):
 
 
 def test_sampling_deterministic_under_fixed_seed(params):
-    """greedy=False consumes the engine key with a per-step split: same
-    seed => same tokens, different seed => (almost surely) different."""
+    """greedy=False samples in-graph with per-(request, token-index)
+    fold_in keys: same seed => same tokens, different seed => (almost
+    surely) different — and tokens never depend on batching/scheduling."""
     prompts = _mixed_prompts(CFG.vocab_size, lens=(3, 5))
     outs = []
     for seed in (7, 7, 8):
@@ -322,7 +323,8 @@ def test_serving_gate_failures_pairing():
     from repro.bench.record import entry
     from repro.bench.serving import serving_gate_failures
 
-    def fam(par, got, want, i8, bf16):
+    def fam(par, got, want, i8, bf16, noshare=48, shared=32, pmis=0,
+            amis=0):
         return [entry("serving/parity/mismatched_tokens", par,
                       kind="serving"),
                 entry("serving/sched/decode_slot_tokens", got,
@@ -332,6 +334,14 @@ def test_serving_gate_failures_pairing():
                 entry("serving/kv/int8_paged_bytes_per_token", i8,
                       kind="serving"),
                 entry("serving/kv/bf16_dense_bytes_per_token", bf16,
+                      kind="serving"),
+                entry("serving/prefix/prefill_tokens_nosharing", noshare,
+                      kind="serving"),
+                entry("serving/prefix/prefill_tokens_shared", shared,
+                      kind="serving", page_size=8),
+                entry("serving/prefix/mismatched_tokens", pmis,
+                      kind="serving"),
+                entry("serving/pipeline/async_sync_mismatches", amis,
                       kind="serving")]
 
     assert serving_gate_failures([]) == []            # legacy record
@@ -342,5 +352,14 @@ def test_serving_gate_failures_pairing():
                serving_gate_failures(fam(0, 20, 16, 100, 200)))
     assert any("kv bytes" in f for f in
                serving_gate_failures(fam(0, 16, 16, 150, 200)))
+    # prefix pair must save >= one full page of prefill tokens ...
+    assert any("full page" in f for f in
+               serving_gate_failures(fam(0, 16, 16, 100, 200,
+                                         noshare=48, shared=41)))
+    # ... without changing a single token.
+    assert any("COW" in f for f in
+               serving_gate_failures(fam(0, 16, 16, 100, 200, pmis=1)))
+    assert any("pipeline" in f for f in
+               serving_gate_failures(fam(0, 16, 16, 100, 200, amis=3)))
     assert any("incomplete" in f for f in
                serving_gate_failures(fam(0, 16, 16, 100, 200)[:2]))

@@ -1,0 +1,172 @@
+"""Async serving runtime: pipelined scheduling must be TOKEN-IDENTICAL to
+the synchronous engine under a fixed seed (greedy and sampled), streaming
+callbacks fire in order with exactly one terminal event, queue/buffer
+plumbing is bounded and instrumented, and a pipeline crash surfaces as an
+``"error"`` terminal event on every in-flight request."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.runtime import (AsyncServeRuntime, TransferBufferPool,
+                                 WorkQueue)
+
+CFG = get_config("yi_6b").reduced().replace(
+    num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+    d_ff=128, vocab_size=64, attn_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(lens=(1, 4, 7, 3, 9, 2)):
+    rng = np.random.default_rng(0)
+    return [rng.integers(1, CFG.vocab_size, size=L).astype(np.int32)
+            for L in lens]
+
+
+def _reqs(prompts, max_new=5, **kw):
+    return [Request(prompt=p, max_new_tokens=max_new, eos_id=CFG.vocab_size,
+                    **kw) for p in prompts]
+
+
+def _engine(params, **kw):
+    return ServeEngine(CFG, params, batch_slots=2, capacity=32, page_size=8,
+                       **kw)
+
+
+# ---------------------------------------------------------------------------
+# plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_workqueue_bounded_and_counted():
+    q = WorkQueue("t", maxsize=2)
+    q.put(1)
+    q.put(2)
+    assert q.stats["puts"] == 2 and q.stats["max_depth"] == 2
+    assert q.get() == 1 and q.get() == 2
+    assert q.get() is None                  # empty: non-blocking None
+    assert q.get(timeout=0.01) is None      # empty: timeout None
+    assert q.stats["gets"] == 2
+
+
+def test_transfer_buffer_pool_bounds_staging():
+    pool = TransferBufferPool(2, capacity=16)
+    a = pool.acquire()
+    a.stage(np.arange(5, dtype=np.int32))
+    assert a.used == 5 and a.arr[4] == 4
+    b = pool.acquire()
+    assert pool.stats == {"acquires": 2, "acquire_waits": 0}
+    pool.release(a)
+    c = pool.acquire()                      # recycled, no new allocation
+    assert c is a
+    pool.release(b)
+    pool.release(c)
+    with pytest.raises(ValueError):
+        AsyncServeRuntime(object.__new__(ServeEngine), transfer_buffers=0)
+
+
+# ---------------------------------------------------------------------------
+# parity: the pipeline gate
+# ---------------------------------------------------------------------------
+
+
+def test_async_matches_sync_greedy(params):
+    sync = _engine(params)
+    ref = [r.out_tokens for r in sync.generate(_reqs(_prompts()))]
+    eng = _engine(params)
+    with AsyncServeRuntime(eng, queue_depth=2, transfer_buffers=2) as rt:
+        out = rt.run(_reqs(_prompts()))
+    assert [r.out_tokens for r in out] == ref
+    assert all(r.finish_reason == "length" for r in out)
+    # the pipeline served through the queues it claims to
+    assert rt.emit_q.stats["gets"] == rt.emit_q.stats["puts"] > 0
+
+
+def test_async_matches_sync_sampled(params):
+    """Sampling keys are per-(request, token index), so scheduler lag can
+    not change sampled tokens either."""
+    kw = dict(greedy=False, temperature=0.8, seed=11)
+    sync = ServeEngine(CFG, params, batch_slots=2, capacity=32, page_size=8,
+                       **kw)
+    ref = [r.out_tokens for r in sync.generate(_reqs(_prompts(), max_new=6))]
+    eng = ServeEngine(CFG, params, batch_slots=2, capacity=32, page_size=8,
+                      **kw)
+    with AsyncServeRuntime(eng) as rt:
+        out = rt.run(_reqs(_prompts(), max_new=6))
+    assert [r.out_tokens for r in out] == ref
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_order_and_terminal_event(params):
+    events = []
+    reqs = _reqs(_prompts((4, 7)), max_new=4,
+                 on_token=None, on_finish=None)
+    for i, r in enumerate(reqs):
+        r.on_token = lambda t, i=i: events.append(("tok", i, t))
+        r.on_finish = lambda why, i=i: events.append(("fin", i, why))
+    eng = _engine(params)
+    with AsyncServeRuntime(eng) as rt:
+        rt.run(reqs)
+    for i, r in enumerate(reqs):
+        mine = [e for e in events if e[1] == i]
+        # every token callback in emission order, then EXACTLY one terminal
+        assert mine == ([("tok", i, t) for t in r.out_tokens]
+                        + [("fin", i, "length")])
+
+
+def test_stream_iterator_and_eos(params):
+    eng = _engine(params)
+    # learn the first greedy token, then make it the EOS of a second run
+    probe = eng.generate(_reqs(_prompts((4,)), max_new=3))[0]
+    first = probe.out_tokens[0]
+    r = Request(prompt=_prompts((4,))[0], max_new_tokens=5, eos_id=first)
+    eng2 = _engine(params)
+    with AsyncServeRuntime(eng2) as rt:
+        it = rt.stream(r)
+        seen = []
+        try:
+            while True:
+                seen.append(next(it))
+        except StopIteration as stop:
+            reason = stop.value
+    assert seen == r.out_tokens == [first]
+    assert reason == "eos" and r.finish_reason == "eos"
+
+
+# ---------------------------------------------------------------------------
+# failure path
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_error_surfaces_as_terminal_event(params):
+    eng = _engine(params)
+
+    def boom(*a, **k):
+        raise RuntimeError("injected device failure")
+
+    # pre-seed the decode jit cache with a failing step: prefill succeeds,
+    # the first decode dispatch kills the device thread
+    eng._decode_fns[eng.backend.name] = boom
+    reqs = _reqs(_prompts((4, 7)), max_new=4)
+    rt = AsyncServeRuntime(eng)
+    handles = [rt.submit(r) for r in reqs]
+    with pytest.raises(RuntimeError, match="serving pipeline failed"):
+        for h in handles:
+            h.result(timeout=60.0)
+    assert all(r.done and r.finish_reason == "error" for r in reqs)
+    with pytest.raises(RuntimeError, match="serving pipeline failed"):
+        rt.close()
+    # a dead runtime refuses new work rather than hanging it
+    with pytest.raises(RuntimeError):
+        rt.submit(_reqs(_prompts((3,)))[0])
