@@ -64,6 +64,8 @@ first-trace time cannot leak into the cached computation.
 
 from __future__ import annotations
 
+import itertools
+
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable
@@ -178,7 +180,9 @@ class ServeEngine:
         self.temperature = temperature
         self._base_key = jax.random.PRNGKey(seed)
         self.pending: list[Request] = []
-        self._rid_counter = 0
+        # itertools.count: a single next() is atomic, so concurrent
+        # submit() threads (async runtime) never mint duplicate rids.
+        self._rid_counter = itertools.count()
         # Persistent device state: the page pool, the paged KV cache, and
         # the prefix trie live for the engine's life (prefix hits span
         # generate() calls), lazily created at first use.
@@ -305,8 +309,7 @@ class ServeEngine:
                 f"request needs {need} pages but the pool only has "
                 f"{self.num_pages - 1} allocatable pages")
         if request.rid is None:
-            request.rid = self._rid_counter
-            self._rid_counter += 1
+            request.rid = next(self._rid_counter)
 
     # -- queue API ----------------------------------------------------------
 
@@ -441,22 +444,50 @@ class _GroupScheduler:
             plen = int(r.prompt.size)
             limit = eng._limit(r)
             total_need = PC.pages_needed(plen + limit - 1, self.ps)
+            def plan(shared):
+                # A prompt exactly covered by shared pages still needs one
+                # forward token for its first logits: re-feed the last
+                # prompt token (its write forks the final shared page —
+                # COW).
+                n_shared = len(shared)
+                refeed = n_shared > 0 and n_shared * self.ps >= plen
+                sstart = plen - 1 if refeed else n_shared * self.ps
+                need_private = total_need - n_shared + (1 if refeed else 0)
+                return n_shared, refeed, sstart, need_private
+
             shared: list[int] = []
             if eng._prefix is not None:
                 shared = eng._prefix.lookup(PC.page_keys(r.prompt, self.ps))
-            n_shared = len(shared)
-            # A prompt exactly covered by shared pages still needs one
-            # forward token for its first logits: re-feed the last prompt
-            # token (its write forks the final shared page — COW).
-            refeed = n_shared > 0 and n_shared * self.ps >= plen
-            sstart = plen - 1 if refeed else n_shared * self.ps
-            need_private = total_need - n_shared + (1 if refeed else 0)
+                # Pin the looked-up chain BEFORE any eviction: share()
+                # lifts each page's refcount above 1, so evict() (which
+                # only frees sole-owner leaves) can never reclaim the
+                # pages this request is about to map.
+                for pg in shared:
+                    self.pool.share(pg)
+            n_shared, refeed, sstart, need_private = plan(shared)
             if need_private > self.pool.free_pages and eng._prefix is not None:
                 st["prefix_evictions"] += eng._prefix.evict(
                     self.pool, need_private - self.pool.free_pages)
+                if need_private > self.pool.free_pages and shared:
+                    # Not enough evictable OUTSIDE the pinned chain: trade
+                    # sharing for capacity.  Unpin, evict again (the chain
+                    # was just touched, so LRU takes everything else
+                    # first), and re-plan on whatever chain survived.
+                    for pg in shared:
+                        self.pool.release(pg)
+                    st["prefix_evictions"] += eng._prefix.evict(
+                        self.pool, total_need - self.pool.free_pages)
+                    shared = eng._prefix.lookup(
+                        PC.page_keys(r.prompt, self.ps))
+                    for pg in shared:
+                        self.pool.share(pg)
+                    n_shared, refeed, sstart, need_private = plan(shared)
             if need_private > self.pool.free_pages:
                 # FIFO under the page budget: the head waits (and is
-                # accounted), later requests do not jump it.
+                # accounted), later requests do not jump it.  Unpin the
+                # chain — the cache keeps its own reference.
+                for pg in shared:
+                    self.pool.release(pg)
                 st["blocked_admissions"] += 1
                 break
             self.waiting.popleft()
@@ -467,8 +498,6 @@ class _GroupScheduler:
                 st["prefix_hits" if n_shared else "prefix_misses"] += 1
                 st["shared_pages_mapped"] += n_shared
             slot = self.free_slots.pop()
-            for pg in shared:
-                self.pool.share(pg)
             priv = self.pool.alloc(need_private)
             row = np.full(self.pps, PC.TRASH_PAGE, np.int32)
             row[:n_shared] = shared

@@ -425,11 +425,19 @@ class PagePool:
 
     def free(self, pages: list[int]) -> None:
         """Drop one reference on each page.  The whole batch is validated
-        before any mutation (a bad page never half-applies the free), and
-        pages reaching zero rejoin in reversed order — preserving the exact
-        LIFO reuse order of the pre-refcount allocator."""
+        before any mutation (a bad page never half-applies the free): a page
+        appearing k times in the batch needs refcount >= k, else the batch
+        would drive its count negative mid-apply.  Pages reaching zero
+        rejoin in reversed order — preserving the exact LIFO reuse order of
+        the pre-refcount allocator."""
+        occurrences: dict[int, int] = {}
         for p in pages:
             self._check_allocated(p)
+            occurrences[p] = occurrences.get(p, 0) + 1
+            if occurrences[p] > self._refs[p]:
+                raise ValueError(
+                    f"double free of page {p}: batch frees it "
+                    f"{occurrences[p]} times but refcount is {self._refs[p]}")
         for p in reversed(pages):
             self._refs[p] -= 1
             if self._refs[p] == 0:

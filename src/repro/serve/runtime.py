@@ -164,9 +164,17 @@ class RequestHandle:
 
     def stream(self, timeout: float = 60.0) -> Iterator[int]:
         """Yield token ids as the emission stage produces them; the
-        generator's ``StopIteration`` value is the finish reason."""
+        generator's ``StopIteration`` value is the finish reason.  Raises
+        :class:`TimeoutError` (after surfacing any pipeline error) when no
+        event arrives within ``timeout`` seconds — mirroring ``result()``
+        rather than leaking ``queue.Empty``."""
         while True:
-            kind, payload = self._events.get(timeout=timeout)
+            try:
+                kind, payload = self._events.get(timeout=timeout)
+            except queue.Empty:
+                self._runtime._check_error()
+                raise TimeoutError(
+                    f"no token or terminal event within {timeout}s") from None
             if kind == "finish":
                 return payload
             yield payload

@@ -57,6 +57,22 @@ def test_pool_refcounts():
     pool.free([b])
 
 
+def test_pool_batch_free_validates_duplicates():
+    """A batch freeing the same page more times than its refcount must
+    reject the WHOLE batch up front — not drive the count negative after
+    the page already rejoined the free list."""
+    pool = PC.PagePool(6)
+    a, b = pool.alloc(2)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([a, b, a])               # a has refcount 1, freed twice
+    assert pool.refcount(a) == 1 and pool.refcount(b) == 1
+    assert pool.free_pages == 3            # rejected batch freed nothing
+    # k occurrences against refcount >= k is a legitimate multi-release
+    pool.share(a)
+    pool.free([a, a, b])
+    assert pool.free_pages == 5
+
+
 def test_pool_shared_page_survives_owner_free():
     """The serving pattern: owner finishes and frees while a sharer still
     maps the page — the page must not re-enter the free list early."""
@@ -165,6 +181,45 @@ def test_prefix_sharing_tokens_and_accounting(params):
     pair_pt = 2 * _PS + 5 + 1               # miss + suffix + refeed token
     assert st["prefill_tokens"] == pair_pt
     assert 2 * solo_pt - (2 * _PS + 1) >= _PS   # the bench gate's shape
+
+
+def test_admit_matching_chain_under_pool_exhaustion(params):
+    """Regression: admission whose PROMPT MATCHES the cached chain while
+    the pool is exhausted.  Eviction used to run before share(), so the
+    LRU pass could free the very pages the request was about to map and
+    share() died with 'double free'.  Now the chain is pinned first; when
+    nothing else is evictable the engine trades sharing for capacity
+    (cannibalizes the chain) instead of crashing or spinning forever."""
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, CFG.vocab_size, size=16).astype(np.int32)
+    # 3 allocatable pages: the request needs all of them (16+2-1 tokens),
+    # so after the first run donates 2 pages to the cache only 1 is free.
+    eng = ServeEngine(CFG, params, batch_slots=1, capacity=32, page_size=_PS,
+                      num_pages=4, prefix_cache=True)
+    a = eng.generate([_req(prompt, max_new=2)])[0]
+    assert len(eng._prefix) == 2 and eng._pool.free_pages == 1
+    b = eng.generate([_req(prompt, max_new=2)])[0]   # pre-fix: ValueError
+    assert b.out_tokens == a.out_tokens
+    assert eng.stats["prefix_evictions"] >= 1
+
+
+def test_eviction_spares_the_looked_up_chain(params):
+    """When OTHER cached pages can cover the deficit, eviction must take
+    them and leave the chain the admitting request matched mapped — the
+    hit still counts and sharing still happens."""
+    rng = np.random.default_rng(8)
+    p1 = rng.integers(1, CFG.vocab_size, size=16).astype(np.int32)
+    p2 = rng.integers(1, CFG.vocab_size, size=16).astype(np.int32)
+    eng = ServeEngine(CFG, params, batch_slots=1, capacity=32, page_size=_PS,
+                      num_pages=6, prefix_cache=True)
+    a = eng.generate([_req(p1, max_new=2)])[0]       # caches p1's 2 pages
+    eng.generate([_req(p2, max_new=2)])              # caches p2's 2 pages
+    assert eng._pool.free_pages == 1
+    hits0 = eng.stats["prefix_hits"]
+    c = eng.generate([_req(p1, max_new=2)])[0]       # match p1 under pressure
+    assert c.out_tokens == a.out_tokens
+    assert eng.stats["prefix_hits"] == hits0 + 1     # sharing survived
+    assert eng.stats["prefix_evictions"] >= 1        # p2's chain gave way
 
 
 def test_prefix_eviction_under_page_pressure(params):

@@ -144,6 +144,28 @@ def test_stream_iterator_and_eos(params):
     assert reason == "eos" and r.finish_reason == "eos"
 
 
+def test_stream_timeout_raises_timeout_error():
+    """A stalled pipeline must surface as TimeoutError (or the pipeline's
+    own error), never a raw ``queue.Empty`` leaking from the event queue."""
+    from repro.serve.runtime import RequestHandle
+
+    class _Idle:
+        def _check_error(self):
+            pass
+
+    h = RequestHandle(_reqs(_prompts((2,)))[0], _Idle())
+    with pytest.raises(TimeoutError, match="no token or terminal event"):
+        next(h.stream(timeout=0.01))
+
+    class _Dead:
+        def _check_error(self):
+            raise RuntimeError("serving pipeline failed")
+
+    h2 = RequestHandle(_reqs(_prompts((2,)))[0], _Dead())
+    with pytest.raises(RuntimeError, match="serving pipeline failed"):
+        next(h2.stream(timeout=0.01))
+
+
 # ---------------------------------------------------------------------------
 # failure path
 # ---------------------------------------------------------------------------
